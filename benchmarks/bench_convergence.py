@@ -1,0 +1,107 @@
+"""Paper Figs. 5, 10-14 + Table 2: real CPU training runs.
+
+Trains a small decoder LM on the synthetic Markov corpus under every
+algorithm and several H values, recording loss and model-divergence
+per step (Figs 10-14 / Fig 5), then combines measured steps-to-target
+with the Table-1 per-iteration times to produce wall-clock-to-target
+(Table 2).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import HardwareSpec, analytic_profile, build_plan
+from repro.data import MarkovCorpus
+from repro.models.transformer import DecoderLM, LMConfig
+from repro.optim import make_optimizer
+from repro.runtime import Runner, StepConfig, init_train_state
+
+from .bench_iteration_time import iteration_times
+
+_CFG = LMConfig(name="bench", n_layers=4, d_model=48, n_heads=4,
+                n_kv_heads=2, d_ff=96, vocab=64, param_dtype="float32",
+                remat=False)
+
+
+def train_once(algo: str, H: int, *, workers: int = 8, steps: int = 60,
+               seed: int = 0, track: bool = True):
+    model = DecoderLM(_CFG)
+    hw = HardwareSpec(bandwidth=1e9, n_workers=workers)
+    prof = analytic_profile(model.layer_costs(4, 32), hw)
+    plan = build_plan(algo, prof, H)
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=600)
+    scfg = StepConfig(track_divergence=track)
+    state = init_train_state(model, opt, jax.random.PRNGKey(seed), workers,
+                             cfg=scfg)
+    data = MarkovCorpus(vocab=64, seq_len=32, batch_per_worker=4,
+                        n_workers=workers, seed=seed)
+    r = Runner(model, opt, plan, data, step_cfg=scfg)
+    r.run(state, steps)
+    return r.history
+
+
+def run_divergence(csv: bool = True, steps: int = 48) -> dict:
+    """Fig. 5: divergence trace, partial vs full sync."""
+    out = {}
+    for algo, H in (("ssgd", 1), ("flsgd", 4), ("plsgd-enp", 4),
+                    ("dreamddp", 4)):
+        hist = train_once(algo, H, steps=steps)
+        out[algo] = [h["divergence"] for h in hist]
+    if csv:
+        print("step," + ",".join(out))
+        for i in range(steps):
+            print(f"{i}," + ",".join(f"{out[a][i]:.3e}" for a in out))
+    return out
+
+
+def run_h_sweep(csv: bool = True, steps: int = 60) -> list[dict]:
+    """Figs 10-14: convergence for different H."""
+    rows = []
+    for algo in ("flsgd", "dreamddp"):
+        for H in (2, 5, 10):
+            hist = train_once(algo, H, steps=steps, track=False)
+            losses = [h["loss"] for h in hist]
+            rows.append({"algo": algo, "H": H, "loss_first": losses[0],
+                         "loss_mid": losses[len(losses) // 2],
+                         "loss_last": losses[-1]})
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+    return rows
+
+
+def run_time_to_target(csv: bool = True, steps: int = 80,
+                       target: float = 2.2) -> list[dict]:
+    """Table 2: steps-to-target (measured) x iteration time (modelled)."""
+    iter_t = {w: iteration_times("gpt2", w) for w in (8, 32)}
+    rows = []
+    for algo, H in (("ssgd", 1), ("flsgd", 5), ("plsgd-enp", 5),
+                    ("dreamddp", 5)):
+        hist = train_once(algo, H, steps=steps, track=False)
+        losses = [h["loss"] for h in hist]
+        steps_to = next((i for i, l in enumerate(losses) if l <= target),
+                        len(losses))
+        key = {"ssgd": "ssgd", "flsgd": "flsgd", "plsgd-enp": "plsgd-enp",
+               "dreamddp": "dreamddp"}[algo]
+        for w in (8, 32):
+            rows.append({"algo": algo, "workers": w,
+                         "steps_to_target": steps_to,
+                         "iter_time_s": iter_t[w][key],
+                         "wall_clock_s": steps_to * iter_t[w][key]})
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    run_divergence()
+    run_h_sweep()
+    run_time_to_target()

@@ -1,0 +1,62 @@
+"""Paper Table 1: average iteration wall-clock time per algorithm.
+
+Reproduced through the calibrated event-timeline model (this container has
+no 32-GPU cluster): per-layer compute/comm costs from the analytic
+profiler at the paper's cluster specs, algorithms as their exact
+schedules.  The paper's qualitative ordering
+(S-SGD > ASC-WFBP > FLSGD > PLSGD-ENP > DreamDDP) is asserted by
+``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+from repro.core import (ascwfbp_iteration_time, build_plan,
+                        flsgd_period_time, simulate_period,
+                        ssgd_iteration_time)
+from repro.core.time_model import Partition
+
+from .paper_models import PAPER_MODELS, paper_profile
+
+H = 5
+
+
+def iteration_times(name: str, n_workers: int) -> dict[str, float]:
+    prof = paper_profile(name, n_workers=n_workers)
+    out = {
+        "ssgd": ssgd_iteration_time(prof),
+        "ascwfbp": ascwfbp_iteration_time(prof),
+        "flsgd": flsgd_period_time(prof, H) / H,
+    }
+    for algo in ("plsgd-enp", "dreamddp"):
+        plan = build_plan(algo, prof, H)
+        part = Partition(tuple(plan.meta["partition_counts"]))
+        fills = None
+        if algo == "dreamddp":
+            n = plan.n_units
+            fills = [[n - 1 - u for u in f] for f in plan.fill_units]
+        tls = simulate_period(prof, part, fills)
+        out[algo] = sum(t.iteration_time for t in tls) / H
+    return out
+
+
+def run(csv: bool = True) -> list[dict]:
+    rows = []
+    for name in PAPER_MODELS:
+        for w in (8, 32):
+            t = iteration_times(name, w)
+            rows.append({
+                "model": name, "workers": w, **t,
+                "S1_vs_ascwfbp": t["ascwfbp"] / t["dreamddp"],
+                "S2_vs_flsgd": t["flsgd"] / t["dreamddp"],
+            })
+    if csv:
+        keys = list(rows[0])
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,105 @@
+"""§Roofline: three-term table from the dry-run artifacts.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+        [--mesh single_pod] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.analysis.roofline import V5EConstants, roofline_from_artifact
+
+_ADVICE = {
+    ("train", "collective"): "overlap/shrink FSDP gathers & sync bytes "
+                             "(int8 pod-axis sync; gather once per step, "
+                             "not per microbatch)",
+    ("train", "compute"): "raise MFU: bigger microbatch, fused attention "
+                          "kernel, fewer remat recomputes",
+    ("train", "memory"): "fuse optimizer (fused_adam_sync), bf16 grads, "
+                         "cut remat stash traffic",
+    ("prefill", "compute"): "flash-attention kernel; larger q-chunk",
+    ("prefill", "memory"): "KV/layout fusion; avoid repeated-KV "
+                           "materialization",
+    ("prefill", "collective"): "shard sequence instead of batch to cut "
+                               "activation gathers",
+    ("decode", "memory"): "decode is weight-streaming-bound: batch more "
+                          "requests per step or quantize weights",
+    ("decode", "collective"): "avoid per-token weight gathers: "
+                              "weight-stationary layout over model axis",
+    ("decode", "compute"): "decode should not be compute-bound: check "
+                           "dispatch-einsum overhead",
+}
+
+
+def load_artifacts(d: str, mesh: str | None = None) -> list[dict]:
+    arts = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            a = json.load(f)
+        if mesh is None or a["mesh"] == mesh:
+            arts.append(a)
+    return arts
+
+
+def table(arts: list[dict], *, markdown: bool = False) -> list[dict]:
+    rows = []
+    for a in arts:
+        if "flops" not in a.get("cost_analysis", {}):
+            continue
+        t = roofline_from_artifact(a)
+        mem_gb = a["memory_analysis"].get("total_bytes", 0) / 1e9
+        rows.append({
+            "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+            "compute_s": t.compute_s, "memory_s": t.memory_s,
+            "collective_s": t.collective_s, "dominant": t.dominant,
+            "useful_ratio": t.useful_ratio,
+            "roofline_fraction": t.roofline_fraction,
+            "roofline_cc": t.roofline_fraction_cc,
+            "mem_gb_per_dev": mem_gb,
+            "advice": _ADVICE.get((a["kind"], t.dominant), ""),
+        })
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    if markdown:
+        hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+               "dominant | useful | roofline | cc-frac | GB/dev |")
+        print(hdr)
+        print("|" + "---|" * 11)
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+                  f"{r['collective_s']:.3e} | {r['dominant']} | "
+                  f"{r['useful_ratio']:.2f} | "
+                  f"{r['roofline_fraction']:.3f} | "
+                  f"{r['roofline_cc']:.3f} | "
+                  f"{r['mem_gb_per_dev']:.1f} |")
+    else:
+        keys = [k for k in rows[0] if k != "advice"] if rows else []
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    arts = load_artifacts(args.dir, args.mesh)
+    if not arts:
+        print(f"no artifacts under {args.dir} — run repro.launch.dryrun")
+        return 1
+    table(arts, markdown=args.markdown)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,115 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+
+Sections:
+  table1   iteration time per algorithm (event-timeline model)
+  table2   wall-clock to target (measured steps x modelled iter time)
+  fig5     model divergence: partial vs full sync (real runs)
+  fig10_14 convergence vs H (real runs)
+  fig15    schedule quality vs brute force
+  fig16    search complexity
+  kernels  Pallas kernels vs oracles + v5e projections
+  roofline dry-run roofline table (if artifacts exist)
+
+Asserts the paper's qualitative claims along the way and exits non-zero on
+violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n=== {name} {'=' * max(0, 60 - len(name))}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the real-training sections")
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    failures = []
+
+    from . import (bench_iteration_time, bench_kernels, bench_scheduling,
+                   bench_search_complexity)
+
+    _section("Table 1: iteration time (s) per algorithm")
+    rows = bench_iteration_time.run()
+    for r in rows:
+        ok = (r["ssgd"] >= r["ascwfbp"] - 1e-12
+              and r["ascwfbp"] > r["dreamddp"]
+              and r["flsgd"] >= r["dreamddp"] - 1e-12
+              and r["plsgd-enp"] >= r["dreamddp"] - 1e-12)
+        if not ok:
+            failures.append(("table1", r))
+    s1 = [r["S1_vs_ascwfbp"] for r in rows]
+    s2 = [r["S2_vs_flsgd"] for r in rows]
+    print(f"# S1 (vs ASC-WFBP) {min(s1):.2f}x..{max(s1):.2f}x | "
+          f"S2 (vs FLSGD) {min(s2):.2f}x..{max(s2):.2f}x "
+          f"(paper: 1.73-5.22x / 1.16-1.50x)")
+
+    _section("Fig 15: schedule quality vs brute force")
+    for rows_ in (bench_scheduling.run_layers(22),
+                  bench_scheduling.run_bandwidth()):
+        for r in rows_:
+            if r["obj_gap_pct"] > 2.0:
+                failures.append(("fig15", r))
+
+    _section("Fig 16: search complexity")
+    for r in bench_search_complexity.run():
+        if r["dd_nodes"] > r["bf_solutions"]:
+            failures.append(("fig16", r))
+
+    _section("Kernels vs oracles (+ v5e roofline projection)")
+    for r in bench_kernels.run():
+        tol = 0.5 if r["kernel"] == "int8_quant" else 0.15
+        if r["max_err"] > tol:
+            failures.append(("kernels", r))
+
+    if not args.fast:
+        from . import bench_convergence
+        _section("Fig 5: divergence partial vs full (real runs)")
+        div = bench_convergence.run_divergence(csv=False, steps=40)
+        print("algo,max_divergence")
+        for a, d in div.items():
+            print(f"{a},{max(d):.3e}")
+        if not (max(div["ssgd"]) < 1e-8
+                and max(div["plsgd-enp"]) < max(div["flsgd"])):
+            failures.append(("fig5", {k: max(v) for k, v in div.items()}))
+
+        _section("Figs 10-14: convergence vs H (real runs)")
+        rows = bench_convergence.run_h_sweep(steps=48)
+        for algo in ("flsgd", "dreamddp"):
+            rs = {r["H"]: r["loss_last"] for r in rows
+                  if r["algo"] == algo}
+            if not all(v < 4.0 for v in rs.values()):
+                failures.append(("fig10_14", (algo, rs)))
+
+        _section("Table 2: wall-clock to target")
+        bench_convergence.run_time_to_target(steps=60)
+
+    _section("Roofline (from dry-run artifacts)")
+    try:
+        from . import roofline
+        arts = roofline.load_artifacts(args.artifacts)
+        if arts:
+            roofline.table(arts)
+        else:
+            print("(no artifacts — run repro.launch.dryrun first)")
+    except Exception as e:                                  # noqa: BLE001
+        print(f"roofline section skipped: {e}")
+
+    print(f"\ntotal {time.time() - t0:.1f}s; {len(failures)} failures")
+    for f in failures:
+        print("FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

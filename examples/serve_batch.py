@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + greedy decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen3-moe-30b-a3b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch",
+                str(args.batch), "--prompt-len", "24", "--gen", "8"])

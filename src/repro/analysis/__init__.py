@@ -1,0 +1,7 @@
+from .hlo import CollectiveOp, CollectiveSummary, parse_collectives
+from .roofline import (RooflineTerms, V5EConstants, model_flops,
+                       roofline_from_artifact)
+
+__all__ = ["CollectiveOp", "CollectiveSummary", "parse_collectives",
+           "RooflineTerms", "V5EConstants", "model_flops",
+           "roofline_from_artifact"]

@@ -1,0 +1,138 @@
+"""Optimized-HLO collective parser.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+traffic, so the roofline's third term is parsed from the compiled module
+text: every ``all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute`` (sync or ``-start`` async form) is collected with its
+result shape, dtype and replica-group size, and converted to per-device
+wire bytes with the standard ring-collective factors:
+
+    all-reduce       2 (K-1)/K * bytes          (result == operand)
+    all-gather         (K-1)/K * result_bytes   (each device receives K-1 shards)
+    reduce-scatter     (K-1)/K * operand_bytes  (= (K-1) * result_bytes)
+    all-to-all         (K-1)/K * bytes
+    collective-permute            bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveOp", "CollectiveSummary", "parse_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+# `%x.1 = (bf16[8,128]{1,0}, bf16[4]{0}) all-reduce-start(...)` etc.
+_LINE = re.compile(
+    r"=\s*(?P<result>.{1,2000}?)\s+"
+    r"(?P<op>" + "|".join(_OPS) + r")(?P<async>-start)?\(")
+_SHAPE = re.compile(r"(?P<dt>[a-z]\d*[a-z]*\d*)\[(?P<dims>[\d,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\{\{(?P<first>[\d,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(?P<ndims>\d+),(?P<size>\d+)\]")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(result):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        first = m.group("first")
+        return len([x for x in first.split(",") if x]) or 1
+    m = _GROUPS_IOTA.search(line)              # iota format [n, size]<=[...]
+    if m:
+        return int(m.group("size"))
+    return 1
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    # f32 all-reduce of bf16-dot partial sums (CPU-backend artifact; the
+    # TPU backend reduces these in bf16 — see hlo_costs.parse_module_costs)
+    f32_dot_partial: bool = False
+
+    @property
+    def wire_bytes(self) -> float:
+        """Per-device bytes on the interconnect (ring model)."""
+        k, b = max(self.group_size, 1), float(self.result_bytes)
+        if self.kind == "collective-permute":
+            return b            # point-to-point: no replica_groups
+        if k == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (k - 1) / k * b
+        if self.kind == "all-gather":
+            return (k - 1) / k * b
+        if self.kind == "reduce-scatter":
+            return (k - 1) * b                  # operand = K * result
+        if self.kind == "all-to-all":
+            return (k - 1) / k * b
+        return b                                # collective-permute
+
+
+@dataclass
+class CollectiveSummary:
+    ops: list[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(o.wire_bytes for o in self.ops)
+
+    @property
+    def total_wire_bytes_tpu(self) -> float:
+        """f32 dot-partial all-reduces counted at bf16 width (TPU dtype)."""
+        return sum(o.wire_bytes * (0.5 if o.f32_dot_partial else 1.0)
+                   for o in self.ops)
+
+    def by_kind(self) -> dict[str, dict]:
+        agg: dict[str, dict] = defaultdict(
+            lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+        for o in self.ops:
+            a = agg[o.kind]
+            a["count"] += 1
+            a["result_bytes"] += o.result_bytes
+            a["wire_bytes"] += o.wire_bytes
+        return dict(agg)
+
+    def to_dict(self) -> dict:
+        return {"total_wire_bytes": self.total_wire_bytes,
+                "total_wire_bytes_tpu": self.total_wire_bytes_tpu,
+                "by_kind": self.by_kind(), "n_ops": len(self.ops)}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveSummary:
+    out = CollectiveSummary()
+    for line in hlo_text.splitlines():
+        m = _LINE.search(line)
+        if not m:
+            continue
+        out.ops.append(CollectiveOp(
+            kind=m.group("op"),
+            result_bytes=_shape_bytes(m.group("result")),
+            group_size=_group_size(line),
+        ))
+    return out

@@ -1,0 +1,235 @@
+"""Loop-aware executed-cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a
+scan-over-layers transformer therefore under-reports FLOPs by ~n_layers x
+n_microbatches.  This parser rebuilds true executed costs from the module
+text:
+
+* computations are parsed with their instructions (name -> result shape);
+* the call graph (``body=/condition=/calls=``) is walked from ENTRY with
+  per-computation execution **multipliers**, taking while trip counts from
+  ``backend_config={"known_trip_count":{"n":...}}`` (emitted by XLA for
+  lax.scan loops);
+* FLOPs: every ``dot`` contributes ``2 * result_elems * contraction`` x
+  multiplier (CPU backend keeps dots unfused, so this is exhaustive);
+* bytes: every costed instruction contributes (operands + result) bytes x
+  multiplier — fusions count only boundary buffers, matching HBM-traffic
+  semantics;
+* collectives: wire bytes per device via the ring factors of
+  :mod:`repro.analysis.hlo`, x multiplier.
+
+Everything is per-device (the module is the SPMD-partitioned program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from .hlo import _DTYPE_BYTES, CollectiveOp, CollectiveSummary, _group_size
+
+__all__ = ["ModuleCosts", "parse_module_costs"]
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE = re.compile(r"(?:body|calls)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_OPCODE = re.compile(r"^(?:\(.*?\)|[a-z]\d*[a-z]*\d*\[[\d,]*\](?:\{[\d,]*\})?"
+                     r"(?:\s*,?\s*)?)+\s*([a-z][\w\-]*)\(")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Opcodes whose operand/result traffic is charged to the memory term.
+# The CPU backend leaves elementwise chains unfused that the TPU backend
+# fuses into neighboring ops, so charging EVERY instruction would inflate
+# HBM bytes ~10-50x; this whitelist is the TPU-fusion proxy: matmuls,
+# fusion boundaries, data movement and reductions are real HBM traffic,
+# bare elementwise/broadcast/convert are assumed fused.
+_COSTED_OPS = {"dot", "convolution", "fusion", "copy", "transpose",
+               "dynamic-slice", "dynamic-update-slice", "gather",
+               "scatter", "reduce", "reduce-window", "sort", "select",
+               "pad", "concatenate", "slice",
+               *_COLLECTIVES, *(c + "-start" for c in _COLLECTIVES)}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = nbytes = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result: str            # result type string
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: CollectiveSummary = field(
+        default_factory=CollectiveSummary)
+    n_dots: int = 0
+    unknown_loops: int = 0
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "bytes_accessed": self.bytes_accessed,
+                "n_dots": self.n_dots, "unknown_loops": self.unknown_loops,
+                "collectives": self.collectives.to_dict()}
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    cur: list[_Instr] | None = None
+    cur_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if line.strip().endswith("{") \
+                else None
+            if line.strip().endswith("{"):
+                m = _COMP_HDR.match(line.strip())
+            if m:
+                cur_name = m.group(2)
+                cur = []
+                if m.group(1):
+                    entry = cur_name
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur_name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPCODE.match(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        # operand names: %tokens between the opcode's '(' and its ')'
+        seg = rhs.split(opcode + "(", 1)
+        ops: list[str] = []
+        if len(seg) == 2:
+            depth, buf = 1, []
+            for ch in seg[1]:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                buf.append(ch)
+            ops = re.findall(r"%([\w.\-]+)", "".join(buf))
+        result = rhs[:rhs.find(opcode + "(")].strip().rstrip(",").strip()
+        cur.append(_Instr(name, opcode, result, ops, line))
+    return comps, entry
+
+
+def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
+    relems, _ = _shape_elems_bytes(instr.result)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    if not m or not instr.operands:
+        return 2.0 * relems                      # degenerate
+    lhs = shapes.get(instr.operands[0], "")
+    sm = _SHAPE.search(lhs)
+    if not sm:
+        return 2.0 * relems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contract = 1
+    for i in (int(x) for x in m.group(1).split(",") if x):
+        if i < len(dims):
+            contract *= dims[i]
+    return 2.0 * relems * contract
+
+
+def parse_module_costs(text: str) -> ModuleCosts:
+    comps, entry = _parse_computations(text)
+    out = ModuleCosts()
+    if entry is None:
+        return out
+
+    # ---- execution multipliers over the call graph -------------------------
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        for ins in comps.get(comp, ()):
+            trips = 1.0
+            tm = _TRIP.search(ins.line)
+            callees = []
+            if ins.opcode == "while":
+                bm = _CALLEE.search(ins.line)
+                cm = _COND.search(ins.line)
+                if tm:
+                    trips = float(tm.group(1))
+                else:
+                    out.unknown_loops += 1
+                if bm:
+                    callees.append((bm.group(1), trips))
+                if cm:
+                    callees.append((cm.group(1), trips + 1.0))
+            elif ins.opcode in ("fusion", "call", "conditional"):
+                for cm2 in _CALLEE.finditer(ins.line):
+                    callees.append((cm2.group(1), 1.0))
+            for callee, t in callees:
+                mult[callee] += mult[comp] * t
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    # ---- costed instructions ------------------------------------------------
+    for comp, instrs in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        shapes = {i_.name: i_.result for i_ in instrs}
+        for ins in instrs:
+            if ins.opcode not in _COSTED_OPS and ins.opcode != "dot":
+                continue
+            _, rbytes = _shape_elems_bytes(ins.result)
+            obytes = sum(_shape_elems_bytes(shapes.get(o, ""))[1]
+                         for o in ins.operands)
+            out.bytes_accessed += (rbytes + obytes) * m
+            if ins.opcode == "dot":
+                out.flops += _dot_flops(ins, shapes) * m
+                out.n_dots += 1
+            base = ins.opcode[:-6] if ins.opcode.endswith("-start") \
+                else ins.opcode
+            if base in _COLLECTIVES:
+                # TPU-dtype note: the CPU backend computes bf16 dots in f32
+                # and GSPMD reduces the partial sums BEFORE the convert, so
+                # dot-partial all-reduces appear as f32 here while the TPU
+                # backend (native bf16 MXU output) reduces bf16.  Flag them
+                # so the roofline can report the TPU-adjusted wire bytes.
+                f32_dot = ("f32[" in ins.result
+                           and "dot_general" in ins.line
+                           and base == "all-reduce")
+                for _ in range(int(m)):
+                    out.collectives.ops.append(CollectiveOp(
+                        kind=base,
+                        result_bytes=rbytes,
+                        group_size=_group_size(ins.line),
+                        f32_dot_partial=f32_dot))
+    return out

@@ -1,0 +1,58 @@
+"""Re-derive executed costs for existing dry-run artifacts from their
+stored ``.hlo.gz`` modules (no recompilation).
+
+    PYTHONPATH=src python -m repro.analysis.reanalyze [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from .hlo import parse_collectives
+from .hlo_costs import parse_module_costs
+
+
+def reanalyze(path: str) -> dict:
+    with open(path) as f:
+        art = json.load(f)
+    hlo_path = path[:-5] + ".hlo.gz"
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    executed = parse_module_costs(hlo)
+    art["cost_analysis"] = {
+        "flops": executed.flops,
+        "bytes accessed": executed.bytes_accessed,
+        "n_dots": executed.n_dots,
+        "unknown_loops": executed.unknown_loops,
+    }
+    art["collectives"] = executed.collectives.to_dict()
+    art["collectives_static"] = parse_collectives(hlo).to_dict()
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if not os.path.exists(path[:-5] + ".hlo.gz"):
+            continue
+        art = reanalyze(path)
+        c = art["cost_analysis"]
+        print(f"{os.path.basename(path):60s} flops={c['flops']:.3e} "
+              f"bytes={c['bytes accessed']:.3e} "
+              f"wire={art['collectives']['total_wire_bytes']:.3e}")
+        n += 1
+    print(f"reanalyzed {n} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

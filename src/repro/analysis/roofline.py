@@ -1,0 +1,112 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e target).
+
+    compute    = HLO_FLOPs / (chips x 197e12 FLOP/s)
+    memory     = HLO_bytes / (chips x 819e9 B/s)
+    collective = wire_bytes_per_device / 5e10 B/s-per-link  (ICI ring)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+FLOPs/bytes in current jax, so no further division by chip count is applied
+— the artifact records which convention was detected (per-device if the
+module was partitioned, whole-program otherwise).
+
+MODEL_FLOPS uses the 6*N*D rule (6*N_active*D for MoE) per training step
+(3x forward for fwd+bwd; serving steps use 2*N*D per generated/processed
+token).  The ratio MODEL_FLOPS / HLO_FLOPs exposes remat and dispatch-
+einsum overheads.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["V5EConstants", "RooflineTerms", "roofline_from_artifact",
+           "model_flops"]
+
+
+@dataclass(frozen=True)
+class V5EConstants:
+    peak_flops: float = 197e12          # bf16 / chip
+    hbm_bw: float = 819e9               # B/s / chip
+    ici_bw: float = 5e10                # B/s / link
+    hbm_per_chip: float = 16e9
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect overlap): max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound step time — the score we hillclimb."""
+        if self.step_time_s <= 0:
+            return 0.0
+        ideal = (self.model_flops / max(self.hlo_flops, 1.0)) \
+            * self.compute_s
+        return ideal / self.step_time_s
+
+    @property
+    def roofline_fraction_cc(self) -> float:
+        """Compute-vs-collective fraction (memory term excluded: the
+        CPU-backend byte parse is an upper bound, while FLOPs and wire
+        bytes are exact — this is the primary hillclimb metric)."""
+        bound = max(self.compute_s, self.collective_s)
+        if bound <= 0:
+            return 0.0
+        return (self.model_flops / max(self.hlo_flops, 1.0)) \
+            * self.compute_s / bound
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(n_params_active: float, tokens: float, *,
+                training: bool) -> float:
+    """6*N*D (train: fwd+bwd) or 2*N*D (serve forward) per step."""
+    return (6.0 if training else 2.0) * n_params_active * tokens
+
+
+def roofline_from_artifact(art: dict, *, hw: V5EConstants = V5EConstants()
+                           ) -> RooflineTerms:
+    """``art`` is one dry-run JSON artifact (see launch/dryrun.py)."""
+    cost = art["cost_analysis"]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    per_device = art.get("cost_is_per_device", True)
+    chips = art["n_devices"]
+    if not per_device:
+        flops /= chips
+        nbytes /= chips
+    coll = art["collectives"]
+    wire = float(coll.get("total_wire_bytes_tpu",
+                          coll["total_wire_bytes"]))
+    mf = float(art["model_flops"]) / chips
+    return RooflineTerms(
+        compute_s=flops / hw.peak_flops,
+        memory_s=nbytes / hw.hbm_bw,
+        collective_s=wire / hw.ici_bw,
+        model_flops=mf,
+        hlo_flops=max(flops, 1.0),
+        useful_ratio=mf / max(flops, 1.0),
+    )

@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, reshard_workers
+
+__all__ = ["CheckpointManager", "reshard_workers"]

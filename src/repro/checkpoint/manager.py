@@ -1,0 +1,162 @@
+"""Sharded, atomic, keep-k checkpointing with elastic resharding.
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json        # tree structure, dtypes, shapes, plan, meta
+        arr_00000.npy ...    # one file per leaf (content-addressed name)
+    <dir>/LATEST             # atomic pointer (rename-into-place)
+
+Design points for the 1000+-node setting (adapted to a single-host
+container; the multi-host variant shards leaves by process index):
+
+* **atomic** — everything is written into ``step_x.tmp`` and ``os.rename``d;
+  a crash mid-save never corrupts the last good checkpoint;
+* **async** — ``save()`` snapshots to host memory (device_get) and hands the
+  file I/O to a background thread, so the train loop resumes immediately;
+* **keep-k** — old steps garbage-collected after a successful save;
+* **elastic** — :func:`reshard_workers` maps a worker-stacked state saved
+  with ``W_old`` replicas onto ``W_new``: replicas are *averaged* into the
+  shared model and re-broadcast (a synchronization point, so Lemma 4's
+  bounded-staleness argument is preserved across membership changes), and
+  the SyncPlan is re-solved by the caller for the new ``K``/bandwidth.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager", "reshard_workers"]
+
+PyTree = Any
+
+
+def _path_str(p) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flatten(tree: PyTree) -> list[tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(_path_str(p) for p in path), np.asarray(leaf))
+            for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: PyTree, *, meta: dict | None = None,
+             block: bool = False) -> None:
+        self.wait()                       # one in-flight save at a time
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        treedef = jax.tree_util.tree_structure(state)
+
+        def work():
+            self._write(step, host, treedef, meta or {})
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: PyTree, treedef, meta: dict) -> None:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _flatten(host)
+        manifest = {"step": step, "meta": meta, "leaves": []}
+        for i, (key, arr) in enumerate(leaves):
+            fn = f"arr_{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": fn, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(name)
+        os.rename(latest_tmp, os.path.join(self.dir, "LATEST"))
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            return int(f.read().strip().split("_")[1])
+
+    def restore(self, template: PyTree, *, step: int | None = None
+                ) -> tuple[int, PyTree, dict]:
+        """Load into ``template``'s structure (shapes may differ in the
+        worker axis — caller reshards via :func:`reshard_workers`)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in flat:
+            key = "/".join(_path_str(p) for p in path)
+            if key not in by_key:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = np.load(os.path.join(d, by_key[key]["file"]))
+            out.append(arr)
+        return step, jax.tree_util.tree_unflatten(treedef, out), \
+            manifest["meta"]
+
+
+def reshard_workers(state: PyTree, w_new: int) -> PyTree:
+    """Elastically change the worker-replica count.
+
+    Every leaf's axis 0 is the worker axis.  Replicas are averaged (float32)
+    and broadcast to ``w_new`` — all workers restart from a synchronization
+    point, so convergence guarantees survive membership changes.
+    """
+    def one(x):
+        x = jnp.asarray(x)
+        m = jnp.mean(x.astype(jnp.float32), axis=0,
+                     keepdims=True).astype(x.dtype)
+        return jnp.broadcast_to(m, (w_new,) + x.shape[1:])
+    return jax.tree.map(one, state)

@@ -1,0 +1,32 @@
+"""Assigned-architecture registry: ``--arch <id>`` -> :class:`ArchSpec`."""
+
+from __future__ import annotations
+
+from . import (deepseek_v3_671b, granite_3_2b, llava_next_34b, mamba2_780m,
+               phi4_mini_3_8b, qwen2_5_32b, qwen3_1_7b, qwen3_moe_30b_a3b,
+               recurrentgemma_9b, whisper_medium)
+from .common import ArchSpec, batch_specs
+from .shapes import SHAPES, ShapeSpec
+
+_MODULES = (granite_3_2b, phi4_mini_3_8b, qwen2_5_32b, qwen3_1_7b,
+            llava_next_34b, mamba2_780m, recurrentgemma_9b,
+            qwen3_moe_30b_a3b, deepseek_v3_671b, whisper_medium)
+
+ARCHS: dict[str, ArchSpec] = {m.ARCH.arch_id: m.ARCH for m in _MODULES}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from "
+                       f"{sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every runnable (arch_id, shape_name) pair."""
+    return [(a.arch_id, s.name) for a in ARCHS.values()
+            for s in a.shapes()]
+
+
+__all__ = ["ARCHS", "SHAPES", "ArchSpec", "ShapeSpec", "get_arch",
+           "batch_specs", "all_cells"]

@@ -1,0 +1,101 @@
+"""ArchSpec — how one assigned architecture plugs into the framework."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+from .shapes import SHAPES, ShapeSpec
+
+__all__ = ["ArchSpec", "batch_specs"]
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    """One selectable ``--arch``.
+
+    ``large`` archs cannot replicate per-DP-rank (a full divergent replica
+    does not fit 16 chips x 16 GB): their local-SGD worker axis is the
+    ``pod`` axis only (W=1 single-pod, W=2 multi-pod) and parameters are
+    FSDP-sharded over ``data`` inside the worker.  Small archs put workers
+    on (``pod`` x) ``data`` — the paper's 8-32-worker regime.
+    """
+
+    arch_id: str
+    family: str                               # dense|vlm|ssm|hybrid|moe|audio
+    make_model: Callable[[], Any]             # full published config
+    make_smoke: Callable[[], Any]             # reduced same-family config
+    large: bool = False                       # worker axis = pod only + FSDP
+    optimizer: str = "adamw"
+    sub_quadratic: bool = False               # long_500k runnable
+    frontend: str | None = None               # "vision" | "audio" (stub)
+    n_frontend_tokens: int = 0                # patches / frames prepended
+    notes: str = ""
+
+    # ---- shape coverage -----------------------------------------------------
+    def shapes(self) -> list[ShapeSpec]:
+        out = []
+        for s in SHAPES.values():
+            if s.name == "long_500k" and not self.sub_quadratic:
+                continue                      # quadratic attention: skipped
+            out.append(s)
+        return out
+
+    def n_workers(self, *, multi_pod: bool) -> int:
+        if self.large:
+            return 2 if multi_pod else 1
+        return 32 if multi_pod else 16
+
+    def worker_axes(self, *, multi_pod: bool) -> tuple[str, ...]:
+        if self.large:
+            return ("pod",) if multi_pod else ()
+        return ("pod", "data") if multi_pod else ("data",)
+
+
+def batch_specs(arch: ArchSpec, shape: ShapeSpec, *,
+                n_workers: int = 1) -> dict[str, ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the *data inputs* of one (arch x shape) cell.
+
+    Training batches carry the leading worker axis ``[W, B/W, ...]``;
+    serving requests do not (serving uses one synchronized replica).
+    """
+    model = arch.make_model()
+    d = model.cfg.d_model
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    s, b = shape.seq_len, shape.global_batch
+
+    if shape.kind == "train":
+        w = n_workers
+        if b % max(w, 1):
+            raise ValueError(f"global_batch {b} not divisible by W={w}")
+        bw = b // w
+        nf = arch.n_frontend_tokens
+        text = s - nf if arch.frontend == "vision" else s
+        spec = {
+            "tokens": ShapeDtypeStruct((w, bw, text), i32),
+            "labels": ShapeDtypeStruct((w, bw, text), i32),
+        }
+        if arch.frontend == "vision":
+            spec["embeds"] = ShapeDtypeStruct((w, bw, nf, d), bf16)
+        if arch.frontend == "audio":
+            spec["frames"] = ShapeDtypeStruct((w, bw, nf, d), bf16)
+        return spec
+
+    if shape.kind == "prefill":
+        nf = arch.n_frontend_tokens
+        text = s - nf if arch.frontend == "vision" else s
+        spec = {"tokens": ShapeDtypeStruct((b, text), i32)}
+        if arch.frontend == "vision":
+            spec["embeds"] = ShapeDtypeStruct((b, nf, d), bf16)
+        if arch.frontend == "audio":
+            spec["frames"] = ShapeDtypeStruct((b, nf, d), bf16)
+        return spec
+
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": ShapeDtypeStruct((b, 1), i32),
+        "pos": ShapeDtypeStruct((b,), i32),
+    }

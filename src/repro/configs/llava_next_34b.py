@@ -1,0 +1,51 @@
+"""llava-next-34b — LLaVA-NeXT 34B backbone (VLM; anyres frontend = stub).
+
+Backbone per assignment: 60 layers, d_model 7168, 56 heads with GQA kv=8,
+d_ff 20480, vocab 64000 (the Yi-34B-style trunk).  The anyres vision tower
+is a STUB: ``input_specs()`` supplies precomputed patch embeddings
+``[b, n_patches, d_model]`` that are prepended to the token embeddings
+(n_patches=576, one base tile).  Loss covers the text tail only.
+"""
+
+from ..models.transformer import DecoderLM, LMConfig
+from .common import ArchSpec
+
+CONFIG = LMConfig(
+    name="llava-next-34b",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64_000,
+    head_dim=128,
+    mlp_kind="swiglu",
+    norm_kind="rmsnorm",
+    rope_theta=5_000_000.0,
+    tie_embeddings=False,
+)
+
+SMOKE = LMConfig(
+    name="llava-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab=512,
+    head_dim=8,
+    param_dtype="float32",
+)
+
+ARCH = ArchSpec(
+    arch_id="llava-next-34b",
+    family="vlm",
+    make_model=lambda: DecoderLM(CONFIG),
+    make_smoke=lambda: DecoderLM(SMOKE),
+    large=True,                 # 34B: one divergent replica per pod
+    optimizer="adafactor",
+    sub_quadratic=False,
+    frontend="vision",
+    n_frontend_tokens=576,
+    notes="anyres tiling stubbed as precomputed patch embeddings",
+)

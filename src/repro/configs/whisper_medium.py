@@ -1,0 +1,49 @@
+"""whisper-medium — Whisper medium backbone (enc-dec; conv frontend stub).
+
+[arXiv:2212.04356]: 24 encoder + 24 decoder layers, d_model 1024, 16 heads
+(MHA, kv=16), d_ff 4096 (GELU), vocab 51865, 1500 audio frames.  The conv
+frontend is a STUB (``input_specs()`` provides precomputed frame
+embeddings); ``max_positions`` is raised to the assigned 32k stress shape
+(the real model stops at 448 — backbone stress test per the brief).
+"""
+
+from ..models.whisper import WhisperConfig, WhisperModel
+from .common import ArchSpec
+
+CONFIG = WhisperConfig(
+    name="whisper-medium",
+    n_enc_layers=24,
+    n_dec_layers=24,
+    d_model=1024,
+    n_heads=16,
+    d_ff=4096,
+    vocab=51_865,
+    n_frames=1500,
+    max_positions=32_776,
+)
+
+SMOKE = WhisperConfig(
+    name="whisper-smoke",
+    n_enc_layers=2,
+    n_dec_layers=2,
+    d_model=32,
+    n_heads=4,
+    d_ff=64,
+    vocab=256,
+    n_frames=12,
+    max_positions=64,
+    param_dtype="float32",
+)
+
+ARCH = ArchSpec(
+    arch_id="whisper-medium",
+    family="audio",
+    make_model=lambda: WhisperModel(CONFIG),
+    make_smoke=lambda: WhisperModel(SMOKE),
+    large=False,
+    optimizer="adamw",
+    sub_quadratic=False,
+    frontend="audio",
+    n_frontend_tokens=1500,
+    notes="enc-dec; cross-attention decode against cached encoder KV",
+)

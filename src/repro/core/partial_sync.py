@@ -1,0 +1,214 @@
+"""Layer-unit indexing over parameter pytrees + partial synchronization ops.
+
+The runtime stores parameters with a **leading worker axis**: every leaf of
+the model pytree is stacked to ``[W, ...]`` where ``W`` is the number of
+local-SGD workers, and that axis is sharded over the mesh's worker axes
+(``('pod',)`` or ``('pod','data')`` / ``('data',)``).  Under GSPMD each
+device holds only its own worker's shard, so divergent replicas cost no
+extra memory versus plain replication (DESIGN.md §2).
+
+Model parameter trees are organised into named **groups**:
+
+* plain groups (``embed``, ``final_norm``, ``lm_head``, ...) — synchronized
+  as one unit;
+* stacked groups (``blocks``, ``enc_blocks``, ...) — leaves carry a layer
+  axis at position 1 (``[W, n_layers, ...]``, scan-over-layers layout); each
+  layer index is its own schedulable unit, and a phase's contiguous layer
+  interval lowers to one static slice -> one fused all-reduce of exactly the
+  scheduled bytes.
+
+A :class:`UnitLayout` lists the units in **network order** — the same order
+the profiler and scheduler use — and maps every unit to (group, index).
+
+All sync ops are pure functions of worker-stacked trees; the mean is taken
+in ``float32`` and cast back (bf16 parameter averaging loses ~3 bits
+otherwise).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "UnitEntry",
+    "UnitLayout",
+    "contiguous_ranges",
+    "sync_units",
+    "tree_worker_mean",
+    "worker_stack",
+    "worker_unstack",
+    "divergence",
+    "unit_divergence",
+]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class UnitEntry:
+    """One schedulable layer unit."""
+
+    name: str
+    group: str
+    index: int | None = None        # None => whole (plain) group
+
+    @property
+    def is_stacked(self) -> bool:
+        return self.index is not None
+
+
+@dataclass(frozen=True)
+class UnitLayout:
+    """Ordered layer units (network order: unit 0 touches the input)."""
+
+    entries: tuple[UnitEntry, ...]
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(e.name for e in self.entries)
+
+    def by_group(self, unit_ids: Sequence[int]) -> dict[str, list[int | None]]:
+        """Group the given unit ids: group -> stacked indices (or [None])."""
+        out: dict[str, list[int | None]] = {}
+        for u in unit_ids:
+            e = self.entries[u]
+            out.setdefault(e.group, []).append(e.index)
+        return out
+
+    def validate_against(self, params: PyTree, *,
+                         worker_stacked: bool = True) -> None:
+        """Check every referenced group exists and stack sizes match.
+
+        ``worker_stacked=False`` for raw model trees (stack axis 0 instead
+        of 1)."""
+        axis = 1 if worker_stacked else 0
+        for e in self.entries:
+            if e.group not in params:
+                raise KeyError(f"unit {e.name}: group {e.group!r} missing "
+                               f"from params (has {list(params)})")
+        # stacked groups: the layer axis must cover the max index
+        for group, idxs in self.by_group(range(len(self))).items():
+            real = [i for i in idxs if i is not None]
+            if not real:
+                continue
+            leaves = jax.tree_util.tree_leaves(params[group])
+            if not leaves:
+                raise ValueError(f"group {group!r} has no leaves")
+            n = leaves[0].shape[axis]
+            if max(real) >= n:
+                raise ValueError(
+                    f"group {group!r}: layout references layer {max(real)} "
+                    f"but stack has {n}")
+
+
+def contiguous_ranges(indices: Sequence[int]) -> list[tuple[int, int]]:
+    """Sorted ``[lo, hi)`` runs covering ``indices`` (static-slice friendly)."""
+    if not indices:
+        return []
+    xs = sorted(set(indices))
+    out, lo, prev = [], xs[0], xs[0]
+    for x in xs[1:]:
+        if x == prev + 1:
+            prev = x
+            continue
+        out.append((lo, prev + 1))
+        lo = prev = x
+    out.append((lo, prev + 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Worker-axis helpers
+# ---------------------------------------------------------------------------
+
+def worker_stack(params: PyTree, n_workers: int) -> PyTree:
+    """Tile a plain param tree to ``[W, ...]`` (identical initial replicas —
+    the paper's requirement that workers start from a synchronization
+    point)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape), params)
+
+
+def worker_unstack(params: PyTree, worker: int = 0) -> PyTree:
+    """Extract one worker's replica (e.g. for evaluation/serving)."""
+    return jax.tree.map(lambda x: x[worker], params)
+
+
+def _mean_bcast(x: jax.Array, *, mean_dtype=jnp.float32) -> jax.Array:
+    """Average over the worker axis and broadcast back — the parameter
+    all-reduce.  Mean in float32, cast back to the storage dtype."""
+    m = jnp.mean(x.astype(mean_dtype), axis=0, keepdims=True).astype(x.dtype)
+    return jnp.broadcast_to(m, x.shape)
+
+
+def tree_worker_mean(tree: PyTree, *, mean_dtype=jnp.float32) -> PyTree:
+    """Full synchronization: average every leaf over the worker axis."""
+    return jax.tree.map(lambda x: _mean_bcast(x, mean_dtype=mean_dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Partial synchronization (the paper's core op)
+# ---------------------------------------------------------------------------
+
+def sync_units(params: PyTree, unit_ids: Sequence[int], layout: UnitLayout,
+               *, mean_dtype=jnp.float32) -> PyTree:
+    """Average the given layer units across workers; others untouched.
+
+    ``params`` is a dict of groups; every leaf is worker-stacked ``[W, ...]``
+    (stacked groups ``[W, n_layers, ...]``).  Unit ids are **static** — each
+    schedule phase compiles to its own executable, so the slices below are
+    constant-folded and the emitted collective moves exactly the scheduled
+    bytes.
+    """
+    if not unit_ids:
+        return params
+    grouped = layout.by_group(unit_ids)
+    out = dict(params)
+    for group, idxs in grouped.items():
+        sub = params[group]
+        if idxs == [None]:
+            out[group] = tree_worker_mean(sub, mean_dtype=mean_dtype)
+            continue
+        if None in idxs:
+            raise ValueError(f"group {group!r} mixes plain and stacked units")
+        ranges = contiguous_ranges([i for i in idxs if i is not None])
+
+        def sync_leaf(x: jax.Array) -> jax.Array:
+            for lo, hi in ranges:
+                sl = x[:, lo:hi]
+                x = x.at[:, lo:hi].set(_mean_bcast(sl, mean_dtype=mean_dtype))
+            return x
+
+        out[group] = jax.tree.map(sync_leaf, sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model divergence Gamma_r (paper Fig. 5 / Lemma 4)
+# ---------------------------------------------------------------------------
+
+def divergence(params: PyTree) -> jax.Array:
+    """``Gamma_r = (1/K) sum_k ||w_k - w_bar||^2`` over the worker axis."""
+    def leaf_div(x: jax.Array) -> jax.Array:
+        xf = x.astype(jnp.float32)
+        d = xf - jnp.mean(xf, axis=0, keepdims=True)
+        return jnp.sum(d * d) / x.shape[0]
+    return sum(jax.tree_util.tree_leaves(jax.tree.map(leaf_div, params)))
+
+
+def unit_divergence(params: PyTree, layout: UnitLayout) -> jax.Array:
+    """Per-unit divergence vector (network order), for Fig. 5-style plots."""
+    vals = []
+    for e in layout.entries:
+        sub = params[e.group]
+        if e.index is not None:
+            sub = jax.tree.map(lambda x, i=e.index: x[:, i], sub)
+        vals.append(divergence(sub))
+    return jnp.stack(vals)

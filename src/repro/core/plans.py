@@ -1,0 +1,167 @@
+"""SyncPlan — the schedule artifact the runtime executes.
+
+A :class:`SyncPlan` is pure data: for each phase ``h`` in a period of ``H``
+iterations, the set of layer-unit ids (network order) whose parameters are
+averaged across workers in that phase.  It is produced once by the scheduler
+(:mod:`repro.core.schedule` + :mod:`repro.core.bubble_fill`) from a profile,
+serialized alongside checkpoints, and re-solved whenever bandwidth or the
+worker count changes (elasticity: the schedule is data, not code).
+
+``algo`` distinguishes what is communicated:
+
+* ``"ssgd"`` / ``"wfbp"`` / ``"ascwfbp"`` — gradients, every iteration
+  (H == 1, all units in phase 0);
+* ``"flsgd"`` — parameters, all units in the last phase of the period;
+* ``"plsgd-enp"`` / ``"dreamddp"`` — parameters, per the partition
+  (+ bubble fills for dreamddp).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+
+from .bubble_fill import FillResult, fill_bubbles
+from .profiler import LayerProfile
+from .schedule import (ScheduleResult, brute_force_schedule,
+                       dreamddp_schedule, enp_schedule)
+from .time_model import Partition
+
+__all__ = ["SyncPlan", "build_plan", "ALGOS"]
+
+ALGOS = ("ssgd", "wfbp", "ascwfbp", "flsgd", "plsgd-enp", "dreamddp",
+         "dreamddp-bf")
+
+
+@dataclass(frozen=True)
+class SyncPlan:
+    """Executable synchronization schedule for one period."""
+
+    algo: str
+    H: int
+    n_units: int
+    # per phase: sorted tuple of unit ids (network order) to synchronize
+    phase_units: tuple[tuple[int, ...], ...]
+    # per phase: the subset of phase_units that are §3.4 bubble fills
+    fill_units: tuple[tuple[int, ...], ...] = ()
+    unit_names: tuple[str, ...] = ()
+    objective: float = 0.0
+    meta: dict = field(default_factory=dict, compare=False, hash=False)
+
+    def __post_init__(self):
+        if len(self.phase_units) != self.H:
+            raise ValueError(
+                f"{len(self.phase_units)} phases for H={self.H}")
+        seen: set[int] = set()
+        for units in self.phase_units:
+            seen.update(units)
+        missing = set(range(self.n_units)) - seen
+        if missing and self.algo not in ("ssgd", "wfbp", "ascwfbp"):
+            raise ValueError(
+                f"plan never synchronizes units {sorted(missing)}; every "
+                f"layer must sync at least once per period (Lemma 4)")
+
+    # -- queries -------------------------------------------------------------
+    def units_for_phase(self, h: int) -> tuple[int, ...]:
+        return self.phase_units[h % self.H]
+
+    def phase_of_iteration(self, r: int) -> int:
+        return r % self.H
+
+    def sync_frequency(self) -> list[int]:
+        """Per-unit sync count per period (>=1; >1 where fills landed)."""
+        counts = [0] * self.n_units
+        for units in self.phase_units:
+            for u in units:
+                counts[u] += 1
+        return counts
+
+    @property
+    def is_parameter_sync(self) -> bool:
+        return self.algo in ("flsgd", "plsgd-enp", "dreamddp", "dreamddp-bf")
+
+    # -- (de)serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "algo": self.algo, "H": self.H, "n_units": self.n_units,
+            "phase_units": [list(u) for u in self.phase_units],
+            "fill_units": [list(u) for u in self.fill_units],
+            "unit_names": list(self.unit_names),
+            "objective": self.objective,
+            "meta": self.meta,
+        }, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "SyncPlan":
+        o = json.loads(s)
+        return SyncPlan(
+            algo=o["algo"], H=o["H"], n_units=o["n_units"],
+            phase_units=tuple(tuple(u) for u in o["phase_units"]),
+            fill_units=tuple(tuple(u) for u in o.get("fill_units", [])),
+            unit_names=tuple(o.get("unit_names", ())),
+            objective=o.get("objective", 0.0), meta=o.get("meta", {}),
+        )
+
+    def fingerprint(self) -> str:
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+
+def _bp_positions_to_units(positions, n_units: int) -> tuple[int, ...]:
+    """BP position i (0 = output-most) -> network-order unit id."""
+    return tuple(sorted(n_units - 1 - p for p in positions))
+
+
+def _plan_from_partition(algo: str, profile: LayerProfile, H: int,
+                         result: ScheduleResult,
+                         fills: FillResult | None) -> SyncPlan:
+    n = len(profile)
+    intervals = result.partition.bp_intervals()
+    phase_units, fill_units = [], []
+    for h, (s, e) in enumerate(intervals):
+        base = set(range(s, e))
+        extra = set(fills.fills[h]) if fills is not None else set()
+        phase_units.append(_bp_positions_to_units(base | extra, n))
+        fill_units.append(_bp_positions_to_units(extra - base, n))
+    return SyncPlan(
+        algo=algo, H=H, n_units=n,
+        phase_units=tuple(phase_units), fill_units=tuple(fill_units),
+        unit_names=tuple(c.name for c in profile.layers),
+        objective=result.objective,
+        meta={
+            "partition_counts": list(result.partition.counts),
+            "search_nodes": result.stats.nodes_visited,
+            "search_solutions": result.stats.solutions,
+            "extra_syncs": fills.extra_syncs if fills else 0,
+            "bandwidth": profile.hw.bandwidth,
+            "n_workers": profile.hw.n_workers,
+        },
+    )
+
+
+def build_plan(algo: str, profile: LayerProfile, H: int, *,
+               fill_mode: str = "exact") -> SyncPlan:
+    """Build the SyncPlan for any supported algorithm."""
+    n = len(profile)
+    names = tuple(c.name for c in profile.layers)
+    if algo in ("ssgd", "wfbp", "ascwfbp"):
+        return SyncPlan(algo=algo, H=1, n_units=n,
+                        phase_units=(tuple(range(n)),),
+                        fill_units=((),), unit_names=names)
+    if algo == "flsgd":
+        phases = tuple(() for _ in range(H - 1)) + (tuple(range(n)),)
+        return SyncPlan(algo=algo, H=H, n_units=n, phase_units=phases,
+                        fill_units=tuple(() for _ in range(H)),
+                        unit_names=names)
+    if algo == "plsgd-enp":
+        return _plan_from_partition(algo, profile, H,
+                                    enp_schedule(profile, H), None)
+    if algo == "dreamddp":
+        res = dreamddp_schedule(profile, H)
+        fills = fill_bubbles(profile, res.partition, mode=fill_mode)
+        return _plan_from_partition(algo, profile, H, res, fills)
+    if algo == "dreamddp-bf":   # brute-force reference (Fig. 15)
+        res = brute_force_schedule(profile, H)
+        fills = fill_bubbles(profile, res.partition, mode=fill_mode)
+        return _plan_from_partition(algo, profile, H, res, fills)
+    raise ValueError(f"unknown algo {algo!r}; choose from {ALGOS}")

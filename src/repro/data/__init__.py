@@ -1,0 +1,3 @@
+from .synthetic import MarkovCorpus, TeacherImages
+
+__all__ = ["MarkovCorpus", "TeacherImages"]

@@ -1,0 +1,28 @@
+"""Jitted public wrapper: Pallas on TPU, interpret-mode elsewhere."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 256):
+    """Blockwise causal GQA attention (forward).
+
+    On this CPU container the kernel body executes under
+    ``interpret=True`` — numerically identical, used by the test sweeps;
+    on TPU the same call compiles to the Mosaic kernel.
+    """
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=not _on_tpu())

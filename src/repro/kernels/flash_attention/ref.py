@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  scale: float | None = None) -> jax.Array:
+    """Naive GQA attention.  q ``[b, sq, n_q, hd]``, k/v ``[b, sk, n_kv,
+    hd]``."""
+    b, sq, n_q, hd = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = n_q // n_kv
+    scale = (hd ** -0.5) if scale is None else scale
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqnh,bsnh->bnqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnqs,bsnh->bqnh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import fused_adamw_step, fused_adamw_tree
+from .ref import adamw_ref
+
+__all__ = ["fused_adamw_step", "fused_adamw_tree", "adamw_ref"]

@@ -1,0 +1,41 @@
+"""Jitted wrapper: Pallas on TPU, interpret elsewhere; tree-level helper."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import fused_adamw
+
+__all__ = ["fused_adamw_step", "fused_adamw_tree"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta1", "beta2", "eps", "weight_decay",
+                                    "block"))
+def fused_adamw_step(p, g, m, v, lr, step, *, beta1=0.9, beta2=0.999,
+                     eps=1e-8, weight_decay=0.0, block=1024):
+    return fused_adamw(p, g, m, v, lr=lr, beta1=beta1, beta2=beta2,
+                       eps=eps, weight_decay=weight_decay, step=step,
+                       block=block, interpret=not _on_tpu())
+
+
+def fused_adamw_tree(params, grads, ms, vs, lr, step, **kw):
+    """Apply the fused kernel leaf-wise over a parameter pytree."""
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(ms)
+    flat_v = treedef.flatten_up_to(vs)
+    out_p, out_m, out_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        p2, m2, v2 = fused_adamw_step(p, g, m, v, lr, step, **kw)
+        out_p.append(p2)
+        out_m.append(m2)
+        out_v.append(v2)
+    unf = treedef.unflatten
+    return unf(out_p), unf(out_m), unf(out_v)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused AdamW kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_ref(p, g, m, v, *, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=0.0, step=0):
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    g = g.astype(jnp.float32)
+    m2 = beta1 * m + (1 - beta1) * g
+    v2 = beta2 * v + (1 - beta2) * g * g
+    upd = (m2 / (1 - beta1 ** t)) / (jnp.sqrt(v2 / (1 - beta2 ** t)) + eps)
+    p2 = p.astype(jnp.float32) * (1 - lr * weight_decay) - lr * upd
+    return p2.astype(p.dtype), m2, v2

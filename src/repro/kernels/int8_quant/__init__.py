@@ -1,0 +1,5 @@
+from .ops import dequantize, quantize
+from .ref import dequantize_rows_ref, quantize_rows_ref
+
+__all__ = ["quantize", "dequantize", "quantize_rows_ref",
+           "dequantize_rows_ref"]

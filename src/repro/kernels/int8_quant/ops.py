@@ -1,0 +1,24 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dequantize_rows, quantize_rows
+
+__all__ = ["quantize", "dequantize"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def quantize(x):
+    return quantize_rows(x, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def dequantize(q, s, dtype=jnp.float32):
+    return dequantize_rows(q, s, dtype=dtype, interpret=not _on_tpu())

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle (mirrors repro.parallel.compression)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_rows_ref(x):
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows_ref(q, s, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * s).astype(dtype)

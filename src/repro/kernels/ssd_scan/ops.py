@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_chunk_fwd
+
+__all__ = ["ssd_chunk"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def ssd_chunk(x, b, c, da):
+    """Chunk-local SSD (Pallas on TPU; interpret elsewhere)."""
+    return ssd_chunk_fwd(x, b, c, da, interpret=not _on_tpu())

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD chunk kernel (mirrors models.mamba2)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, b, c, da):
+    """Same contract as :func:`..kernel.ssd_chunk_fwd`."""
+    xf = x.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    cum = jnp.cumsum(da.astype(jnp.float32), axis=-1)       # [B,NC,H,cs]
+    seg = cum[..., :, None] - cum[..., None, :]
+    cs = x.shape[3]
+    tril = jnp.tril(jnp.ones((cs, cs), bool))
+    L = jnp.where(tril, jnp.exp(seg), 0.0)
+    y = jnp.einsum("bzhin,bzhjn,bzhij,bzhjp->bzhip", cf, bf, L, xf)
+    decay = jnp.exp(cum[..., -1:] - cum)
+    s = jnp.einsum("bzhjp,bzhjn,bzhj->bzhpn", xf, bf, decay)
+    return y.astype(x.dtype), s

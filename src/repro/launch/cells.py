@@ -1,0 +1,368 @@
+"""Cell builders: one lowerable jitted program per (arch x shape x mesh).
+
+A *cell* bundles the jitted step function, its ShapeDtypeStruct argument
+specs and explicit in/out shardings — everything ``dryrun.py`` needs to
+``.lower().compile()`` without allocating a single parameter.
+
+Sharding plan (baseline; §Perf hillclimbs from here):
+
+* train — worker axis per :meth:`ArchSpec.worker_axes`; tensor/expert
+  parallel over ``model``; ``large`` archs FSDP over ``data``; batch
+  ``[W, n_micro, B_micro, ...]`` with grad-accumulation scan sized so the
+  per-device remat stash stays under ~2 GB;
+* prefill/decode — one synchronized replica; weights over ``model``
+  (+``data`` for large archs), request batch over ``data`` when divisible,
+  caches via :func:`repro.parallel.sharding.cache_shardings`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ArchSpec, get_arch
+from ..configs.common import batch_specs
+from ..core import HardwareSpec, analytic_profile, build_plan
+from ..core.plans import SyncPlan
+from ..optim import make_optimizer
+from ..parallel.sharding import leaf_spec, param_shardings
+from ..runtime.step import (StepConfig, init_train_state, make_decode_step,
+                            make_prefill_step, make_train_step)
+
+__all__ = ["Cell", "build_cell", "WAN_BANDWIDTH"]
+
+WAN_BANDWIDTH = 1e9          # geo sync-axis bytes/s for schedule solving
+_STASH_BUDGET = 2e9          # per-device remat stash target (bytes)
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    mesh_name: str
+    kind: str                           # train | prefill | decode
+    jitted: Any
+    arg_specs: tuple
+    n_devices: int
+    model_flops: float
+    meta: dict = field(default_factory=dict)
+
+    def lower(self):
+        return self.jitted.lower(*self.arg_specs)
+
+
+def _mk_opt(arch: ArchSpec, override: str | None = None):
+    name = override or arch.optimizer
+    if name == "adafactor":
+        return make_optimizer("adafactor", beta1=0.0, lr=1e-3)
+    return make_optimizer(name, lr=3e-4)
+
+
+def _plan_for(arch: ArchSpec, model, shape, w: int,
+              bandwidth: float = WAN_BANDWIDTH) -> SyncPlan:
+    bw_batch = max(shape.global_batch // max(w, 1), 1)
+    costs = model.layer_costs(bw_batch, shape.seq_len)
+    hw = HardwareSpec(bandwidth=bandwidth, n_workers=max(w, 2),
+                      latency=1e-3)
+    prof = analytic_profile(costs, hw)
+    return build_plan("dreamddp", prof, H=5)
+
+
+def _dominant_phase(plan: SyncPlan, model, shape) -> int:
+    """Phase with the most synced parameter bytes (the sync-critical one)."""
+    costs = model.layer_costs(1, shape.seq_len)
+    best, best_b = 0, -1.0
+    for h in range(plan.H):
+        b = sum(costs[u][1] for u in plan.units_for_phase(h))
+        if b > best_b:
+            best, best_b = h, b
+    return best
+
+
+def _n_micro(arch: ArchSpec, model, shape, w: int, mesh: Mesh) -> int:
+    """Grad-accumulation factor bounding the per-device remat stash.
+
+    Constraint: for FSDP (large) archs the per-microbatch batch must stay
+    divisible by the ``data`` axis, since the batch is data-sharded inside
+    the worker."""
+    cfg = model.cfg
+    d = cfg.d_model
+    n_layers = getattr(cfg, "n_layers", None) or \
+        (cfg.n_enc_layers + cfg.n_dec_layers)
+    bw_batch = max(shape.global_batch // max(w, 1), 1)
+    data_shard = mesh.shape["data"] if arch.large else 1
+    b_dev = max(bw_batch // data_shard, 1)
+    stash = b_dev * shape.seq_len * d * 2 * n_layers
+    n = max(1, math.ceil(stash / _STASH_BUDGET))
+    n_max = max(bw_batch // data_shard, 1)
+    n = min(n, n_max)
+    while bw_batch % n or (bw_batch // n) % data_shard:
+        n -= 1
+    return max(n, 1)
+
+
+def _shard_if_divisible(mesh: Mesh, n: int, axis: str = "data"):
+    return axis if n % mesh.shape[axis] == 0 and n >= mesh.shape[axis] \
+        else None
+
+
+def _adafactor_shardings(pshard, pspec, mesh: Mesh, min_dim: int = 8):
+    def one(ns, sds):
+        spec = tuple(ns.spec) + (None,) * (len(sds.shape) - len(ns.spec))
+        if (len(sds.shape) >= 2 and sds.shape[-1] >= min_dim
+                and sds.shape[-2] >= min_dim):
+            return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                    "vc": NamedSharding(mesh, P(*spec[:-2], spec[-1]))}
+        return {"v": NamedSharding(mesh, P(*spec))}
+    is_ns = lambda x: isinstance(x, NamedSharding)
+    return jax.tree.map(one, pshard, pspec, is_leaf=is_ns)
+
+
+def _opt_shardings(opt_name: str, pshard, pspec, mesh: Mesh):
+    if opt_name in ("adam", "adamw"):
+        return {"m": pshard, "v": pshard}
+    if opt_name == "momentum":
+        return {"m": pshard}
+    if opt_name == "adafactor":
+        return {"v": _adafactor_shardings(pshard, pspec, mesh), "m": None}
+    return {}
+
+
+def _cache_shardings(cache_spec, mesh: Mesh, *, batch: int):
+    """Serving caches ``[n_layers, B, ...]``: batch over data when
+    divisible; the largest model-divisible trailing dim over ``model``."""
+    msize = mesh.shape["model"]
+    dsh = _shard_if_divisible(mesh, batch, "data")
+
+    def one(s):
+        dims: list = [None] * len(s.shape)
+        if len(s.shape) >= 2:
+            dims[1] = dsh
+        for i in range(len(s.shape) - 1, 1, -1):     # prefer trailing dims
+            if s.shape[i] % msize == 0 and s.shape[i] >= msize:
+                dims[i] = "model"
+                break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# Train cells
+# ---------------------------------------------------------------------------
+
+def build_train_cell(arch: ArchSpec, shape, mesh: Mesh, *,
+                     multi_pod: bool, algo: str = "dreamddp",
+                     phase: int | None = None,
+                     step_cfg: StepConfig | None = None,
+                     intra_worker: str = "tp",
+                     optimizer_override: str | None = None) -> Cell:
+    """``intra_worker``: how a worker's 16 `model`-axis chips cooperate.
+
+    * ``"tp"`` (baseline) — Megatron tensor parallel (heads/ff/vocab over
+      `model`); activations all-reduced twice per layer.
+    * ``"fsdp"`` — ZeRO-3 within the worker: weights sharded over `model`
+      and gathered per layer; batch sharded over `model` (REFUTED in
+      §Perf: GSPMD picks contraction-dim partial sums).
+    * ``"dp"`` — weights replicated per chip, batch sharded over `model`
+      (each chip = one DP rank inside the worker; grads all-reduced over
+      `model`, DreamDDP partial sync over `data`).  Small archs whose
+      params+Adafactor state fit one chip (beyond-paper §Perf winner).
+    """
+    model = arch.make_model()
+    if intra_worker == "dp" and optimizer_override is None:
+        optimizer_override = "adafactor"   # replicated state must fit
+    opt = _mk_opt(arch, optimizer_override)
+    w = arch.n_workers(multi_pod=multi_pod)
+    worker_axes = arch.worker_axes(multi_pod=multi_pod)
+    n_micro = _n_micro(arch, model, shape, w, mesh)
+    if intra_worker in ("fsdp", "dp"):
+        if arch.large:
+            raise ValueError(f"{intra_worker} intra-worker mode is for "
+                             "small archs")
+        # batch shards over `model`: microbatching only if still too big
+        bw_batch = shape.global_batch // max(w, 1)
+        if bw_batch % mesh.shape["model"]:
+            raise ValueError("worker batch must divide the model axis")
+        n_micro = 1
+    cfg = step_cfg or StepConfig(n_microbatches=n_micro)
+
+    if algo == "dreamddp":
+        plan = _plan_for(arch, model, shape, w)
+    else:
+        prof = analytic_profile(model.layer_costs(1, shape.seq_len),
+                                HardwareSpec(n_workers=max(w, 2)))
+        plan = build_plan(algo, prof, 5)
+    ph = _dominant_phase(plan, model, shape) if phase is None else phase
+    step_fn = make_train_step(model, opt, plan, ph, cfg=cfg)
+
+    # ---- arg specs ----------------------------------------------------------
+    state_spec = jax.eval_shape(
+        lambda: init_train_state(model, opt, jax.random.PRNGKey(0), w,
+                                 cfg=cfg))
+    bspec = batch_specs(arch, shape, n_workers=w)
+    if cfg.n_microbatches > 1:
+        bspec = jax.tree.map(
+            lambda s: ShapeDtypeStruct(
+                (s.shape[0], cfg.n_microbatches,
+                 s.shape[1] // cfg.n_microbatches) + s.shape[2:], s.dtype),
+            bspec)
+
+    # ---- shardings ----------------------------------------------------------
+    from ..parallel.sharding import RULES_EP2, RULES_FSDP_MODEL
+    if intra_worker == "ep2":
+        # two-axis expert parallel (large MoE archs, expert count must
+        # divide data x model): expert weights fully local; non-expert
+        # weights TP over `model` + FSDP over `data` as usual
+        pshard = param_shardings(model.param_specs(), mesh,
+                                 worker_axes=worker_axes, fsdp=True,
+                                 rules=RULES_EP2,
+                                 shapes=state_spec.params)
+    elif intra_worker == "fsdp":
+        pshard = param_shardings(model.param_specs(), mesh,
+                                 worker_axes=worker_axes, fsdp=True,
+                                 fsdp_axis="model",
+                                 rules=RULES_FSDP_MODEL,
+                                 shapes=state_spec.params)
+    elif intra_worker == "dp":
+        pshard = param_shardings(model.param_specs(), mesh,
+                                 worker_axes=worker_axes, fsdp=False,
+                                 rules=RULES_FSDP_MODEL,
+                                 shapes=state_spec.params)
+    else:
+        pshard = param_shardings(model.param_specs(), mesh,
+                                 worker_axes=worker_axes, fsdp=arch.large,
+                                 shapes=state_spec.params)
+    oshard = _opt_shardings(optimizer_override or arch.optimizer, pshard,
+                            state_spec.params, mesh)
+    repl = NamedSharding(mesh, P())
+    from ..runtime.step import TrainState
+    state_sh = TrainState(params=pshard, opt_state=oshard, step=repl,
+                          ef=None, outer=None)
+
+    lead = (worker_axes if len(worker_axes) != 1 else worker_axes[0]) \
+        if worker_axes else None
+    data_left = "data" if arch.large else \
+        ("model" if intra_worker in ("fsdp", "dp") else None)
+    extra = (None,) if cfg.n_microbatches > 1 else ()
+
+    def bsh(s):
+        rest = (None,) * (len(s.shape) - 2 - len(extra))
+        return NamedSharding(mesh, P(lead, *extra, data_left, *rest))
+
+    batch_sh = jax.tree.map(bsh, bspec)
+
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    tokens = shape.global_batch * shape.seq_len
+    from ..analysis.roofline import model_flops
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name,
+        mesh_name="multi_pod" if multi_pod else "single_pod", kind="train",
+        jitted=jitted, arg_specs=(state_spec, bspec),
+        n_devices=mesh.size,
+        model_flops=model_flops(model.active_param_count(), tokens,
+                                training=True),
+        meta={"algo": algo, "phase": ph, "n_workers": w,
+              "n_microbatches": cfg.n_microbatches,
+              "intra_worker": intra_worker,
+              "plan_counts": plan.meta.get("partition_counts"),
+              "synced_units": list(plan.units_for_phase(ph))},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve cells
+# ---------------------------------------------------------------------------
+
+def _serve_param_shardings(arch: ArchSpec, model, mesh: Mesh, pspec):
+    return param_shardings(model.param_specs(), mesh, worker_axes=(),
+                           fsdp=arch.large, with_lead=False, shapes=pspec)
+
+
+def build_prefill_cell(arch: ArchSpec, shape, mesh: Mesh, *,
+                       multi_pod: bool) -> Cell:
+    model = arch.make_model()
+    b, s = shape.global_batch, shape.seq_len
+    pspec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_spec = jax.eval_shape(lambda: model.init_cache(b, s))
+    bspec = batch_specs(arch, shape)
+    fn = make_prefill_step(model, with_frontend=arch.frontend)
+
+    pshard = _serve_param_shardings(arch, model, mesh, pspec)
+    cshard = _cache_shardings(cache_spec, mesh, batch=b)
+    dsh = _shard_if_divisible(mesh, b)
+    tok_sh = NamedSharding(mesh, P(dsh, None))
+
+    args = [pspec, bspec["tokens"], cache_spec]
+    in_sh = [pshard, tok_sh, cshard]
+    if arch.frontend == "audio":
+        args.append(bspec["frames"])
+        in_sh.append(NamedSharding(mesh, P(dsh, None, None)))
+    elif arch.frontend == "vision":
+        args.append(bspec["embeds"])
+        in_sh.append(NamedSharding(mesh, P(dsh, None, None)))
+
+    jitted = jax.jit(fn, in_shardings=tuple(in_sh),
+                     out_shardings=(None, cshard), donate_argnums=(2,))
+    from ..analysis.roofline import model_flops
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name,
+        mesh_name="multi_pod" if multi_pod else "single_pod",
+        kind="prefill", jitted=jitted, arg_specs=tuple(args),
+        n_devices=mesh.size,
+        model_flops=model_flops(model.active_param_count(), b * s,
+                                training=False),
+        meta={},
+    )
+
+
+def build_decode_cell(arch: ArchSpec, shape, mesh: Mesh, *,
+                      multi_pod: bool) -> Cell:
+    model = arch.make_model()
+    b, s = shape.global_batch, shape.seq_len
+    pspec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_spec = jax.eval_shape(lambda: model.init_cache(b, s))
+    bspec = batch_specs(arch, shape)
+    fn = make_decode_step(model)
+
+    pshard = _serve_param_shardings(arch, model, mesh, pspec)
+    cshard = _cache_shardings(cache_spec, mesh, batch=b)
+    dsh = _shard_if_divisible(mesh, b)
+    in_sh = (pshard, cshard, NamedSharding(mesh, P(dsh, None)),
+             NamedSharding(mesh, P(dsh)))
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=(None, cshard),
+                     donate_argnums=(1,))
+    from ..analysis.roofline import model_flops
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name,
+        mesh_name="multi_pod" if multi_pod else "single_pod",
+        kind="decode", jitted=jitted,
+        arg_specs=(pspec, cache_spec, bspec["token"], bspec["pos"]),
+        n_devices=mesh.size,
+        model_flops=model_flops(model.active_param_count(), b,
+                                training=False),
+        meta={"kv_depth": s},
+    )
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh, *,
+               multi_pod: bool, **kw) -> Cell:
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_cell(arch, shape, mesh, multi_pod=multi_pod,
+                                **kw)
+    kw.pop("intra_worker", None)
+    kw.pop("algo", None)
+    kw.pop("phase", None)
+    if shape.kind == "prefill":
+        return build_prefill_cell(arch, shape, mesh, multi_pod=multi_pod,
+                                  **kw)
+    return build_decode_cell(arch, shape, mesh, multi_pod=multi_pod, **kw)

@@ -1,0 +1,22 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = {"shape": (16, 16), "axes": ("data", "model")}
+MULTI_POD = {"shape": (2, 16, 16), "axes": ("pod", "data", "model")}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; ``multi_pod`` adds the 2-pod geo axis.
+
+    The dry-run launcher sets ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=512`` before any jax import so this mesh can be built on
+    the CPU-only container (see ``dryrun.py`` lines 1-2).
+    """
+    spec = MULTI_POD if multi_pod else SINGLE_POD
+    return jax.make_mesh(spec["shape"], spec["axes"])

@@ -1,0 +1,220 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) with absorbed decode.
+
+Training / prefill expand the compressed KV latent into per-head keys and
+values (standard path).  Decode uses the **absorbed** formulation: queries
+are folded through ``W_uk`` so attention runs directly against the cached
+latent ``c_kv [b, s, r_kv]`` — the KV cache is ``r_kv + r_rope`` floats per
+token instead of ``2 * n_heads * head_dim`` (for V3: 576 vs 32768, a 57x
+cache shrink; this is the production serving path).
+
+RoPE applies only to the decoupled rope sub-dimensions; the shared key-rope
+is broadcast across heads.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Init, apply_rope, norm_init, rms_norm, rope_freqs
+
+__all__ = ["MLAConfig", "mla_init", "mla_apply_full", "mla_decode",
+           "mla_init_cache", "mla_param_count", "mla_fwd_flops"]
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    n_heads: int = 128
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(init: Init, cfg: MLAConfig, d_model: int, *, dtype=jnp.bfloat16):
+    h, rq, rkv = cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank
+    s = d_model ** -0.5
+    p = {
+        "w_dq": init.normal((d_model, rq), s, dtype),
+        "q_norm": norm_init(rq, dtype=dtype)[0],
+        "w_uq": init.normal((rq, h * cfg.qk_dim), rq ** -0.5, dtype),
+        "w_dkv": init.normal((d_model, rkv + cfg.qk_rope_dim), s, dtype),
+        "kv_norm": norm_init(rkv, dtype=dtype)[0],
+        "w_uk": init.normal((rkv, h * cfg.qk_nope_dim), rkv ** -0.5, dtype),
+        "w_uv": init.normal((rkv, h * cfg.v_head_dim), rkv ** -0.5, dtype),
+        "w_o": init.normal((h * cfg.v_head_dim, d_model),
+                           (h * cfg.v_head_dim) ** -0.5, dtype),
+    }
+    spec = {
+        "w_dq": (None, None),
+        "q_norm": {"scale": (None,)},
+        "w_uq": (None, "heads"),
+        "w_dkv": (None, None),
+        "kv_norm": {"scale": (None,)},
+        "w_uk": (None, "heads"),
+        "w_uv": (None, "heads"),
+        "w_o": ("heads", None),
+    }
+    return p, spec
+
+
+def _project_q(p, cfg: MLAConfig, x, positions, inv_freq):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = rms_norm(p["q_norm"], x @ p["w_dq"]) @ p["w_uq"]
+    q = q.reshape(b, s, h, cfg.qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, inv_freq)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, cfg: MLAConfig, x, positions, inv_freq):
+    ckv_rope = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(ckv_rope, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, inv_freq)[:, :, 0]
+    return c_kv, k_rope                      # [b,s,r_kv], [b,s,rope]
+
+
+def mla_apply_full(p, cfg: MLAConfig, x: jax.Array,
+                   positions: jax.Array, *,
+                   q_chunk: int = 1024) -> tuple[jax.Array, dict]:
+    """Full-expansion MLA (training / prefill).  Returns (out, cache).
+
+    Queries are processed in ``q_chunk`` blocks under remat so the score
+    tensor peaks at ``[b, h, q_chunk, s]`` — without this the 32k-prefill
+    cell materializes an s x s score map per head (225 GB/device in the
+    dry-run; see EXPERIMENTS.md §Dry-run)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    inv_freq = rope_freqs(cfg.qk_rope_dim, cfg.rope_theta)
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions, inv_freq)
+    c_kv, k_rope = _compress_kv(p, cfg, x, positions, inv_freq)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, cfg.qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, cfg.v_head_dim)
+    scale = cfg.qk_dim ** -0.5
+
+    # §Perf (dsv3 hillclimb): concatenate the nope and rope sub-dims and
+    # broadcast the shared key-rope across heads so scores come from ONE
+    # head-sharded einsum.  The two-einsum form made GSPMD all-reduce
+    # full f32 score gradients over `model` in the backward (2.1 GB x
+    # 3712 executions/step measured in the dry-run).  The explicit
+    # constraints pin the head dim to `model` — without them the solver
+    # shards the 192-wide contraction dim instead and partial-sums the
+    # scores (25 TB/step measured).
+    from ..parallel.sharding import maybe_constrain
+    kq = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    kq = maybe_constrain(kq, None, None, "model", None)
+    v = maybe_constrain(v, None, None, "model", None)
+
+    def attend(qc, qp):
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, kq,
+                            preferred_element_type=jnp.float32) * scale
+        mask = positions[:, None, None, :] <= qp[:, None, :, None]
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_cat = maybe_constrain(q_cat, None, None, "model", None)
+    if s <= q_chunk:
+        out = attend(q_cat, positions)
+    else:
+        pad = (-s) % q_chunk
+        padq = lambda a: jnp.pad(a, [(0, 0), (0, pad)]
+                                 + [(0, 0)] * (a.ndim - 2))
+        qq, qp = padq(q_cat), padq(positions)
+        nc = qq.shape[1] // q_chunk
+        reshp = lambda a: jnp.moveaxis(
+            a.reshape((b, nc, q_chunk) + a.shape[2:]), 1, 0)
+
+        def body(_, xs):
+            return None, jax.checkpoint(attend)(*xs)
+
+        _, out = jax.lax.scan(body, None, (reshp(qq), reshp(qp)))
+        out = jnp.moveaxis(out, 0, 1).reshape(
+            (b, nc * q_chunk) + out.shape[3:])[:, :s]
+    out = out.reshape(b, s, -1)
+    return out @ p["w_o"], {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_init_cache(cfg: MLAConfig, batch: int, max_seq: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg: MLAConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed one-token decode.  ``x: [b, 1, d]``, ``pos: [b]`` (0-based
+    write position == number of valid cache entries)."""
+    b, _, _ = x.shape
+    h = cfg.n_heads
+    inv_freq = rope_freqs(cfg.qk_rope_dim, cfg.rope_theta)
+    positions = pos[:, None]
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions, inv_freq)  # [b,1,h,*]
+    c_new, kr_new = _compress_kv(p, cfg, x, positions, inv_freq)
+
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos[0], axis=1)
+    cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos[0], axis=1)
+
+    # absorb: q_c[h, r_kv] = q_nope[h, nope] @ W_uk[r_kv, h*nope]^T
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
+    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)          # [b,1,h,r_kv]
+
+    scale = cfg.qk_dim ** -0.5
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_c, cache["c_kv"],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, cache["k_rope"],
+                           preferred_element_type=jnp.float32)) * scale
+    sk = cache["c_kv"].shape[1]
+    valid = jnp.arange(sk)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    o_c = jnp.einsum("bhqs,bsr->bqhr", probs, cache["c_kv"])  # [b,1,h,r_kv]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_c, w_uv).reshape(b, 1, -1)
+    return o @ p["w_o"], cache
+
+
+# ---------------------------------------------------------------------------
+# Analytic accounting
+# ---------------------------------------------------------------------------
+
+def mla_param_count(cfg: MLAConfig, d_model: int) -> int:
+    h = cfg.n_heads
+    n = d_model * cfg.q_lora_rank + cfg.q_lora_rank                 # dq+norm
+    n += cfg.q_lora_rank * h * cfg.qk_dim                           # uq
+    n += d_model * (cfg.kv_lora_rank + cfg.qk_rope_dim)             # dkv
+    n += cfg.kv_lora_rank                                           # kv norm
+    n += cfg.kv_lora_rank * h * (cfg.qk_nope_dim + cfg.v_head_dim)  # uk+uv
+    n += h * cfg.v_head_dim * d_model                               # o
+    return n
+
+
+def mla_fwd_flops(cfg: MLAConfig, d_model: int, tokens: int,
+                  seq_len: int) -> float:
+    """Forward FLOPs of full-expansion MLA over ``tokens`` (train/prefill)."""
+    h = cfg.n_heads
+    proj = mla_param_count(cfg, d_model) - cfg.q_lora_rank - cfg.kv_lora_rank
+    flops = 2.0 * tokens * proj                                    # projections
+    flops += 2.0 * tokens * seq_len * h * (cfg.qk_dim + cfg.v_head_dim)
+    return flops

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts feed-forward (token-choice top-k, capacity-based).
+
+Shardability is the design driver: the dispatch/combine one-hot einsums keep
+`expert` and `batch` as *free* dimensions, so with experts sharded over the
+``model`` mesh axis and batch over ``data`` the whole MoE layer partitions
+with **zero resharding collectives** (the per-device dispatch matmul is the
+price — it is counted and discussed in the roofline analysis; the
+§Perf hillclimb offers a gather-based alternative).
+
+Capacity is per-sequence (``C = ceil(S * k / E * capacity_factor)``), the
+MaxText/Switch convention; overflow tokens are dropped (their combine weight
+is zero), underflow slots compute on zeros.
+
+Routing variants:
+
+* ``router="softmax"`` — softmax over all expert logits, renormalized top-k
+  (Qwen3-MoE);
+* ``router="sigmoid"`` — sigmoid scores, top-k, normalize, scale
+  (DeepSeek-V3's noaux-tc routing, sans the aux-loss-free bias update);
+  plus ``n_shared`` always-on shared experts (DeepSeek-V3: 1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Init, dense
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_param_count",
+           "moe_fwd_flops"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden size
+    n_shared: int = 0            # always-on shared experts
+    capacity_factor: float = 1.25
+    router: str = "softmax"      # or "sigmoid"
+    routed_scale: float = 1.0    # DeepSeek routed_scaling_factor (2.5 for V3)
+
+    def capacity(self, seq_len: int) -> int:
+        c = int(seq_len * self.top_k / self.n_experts * self.capacity_factor)
+        return max(c, self.top_k)
+
+
+def moe_init(init: Init, cfg: MoEConfig, d_model: int, *, dtype=jnp.bfloat16):
+    """Router + stacked expert SwiGLU weights (+ shared experts)."""
+    e, f = cfg.n_experts, cfg.d_ff
+    s_in = d_model ** -0.5
+    s_out = f ** -0.5
+    p = {
+        "router": {"w": init.normal((d_model, e), s_in, jnp.float32)},
+        "gate": init.normal((e, d_model, f), s_in, dtype),
+        "up": init.normal((e, d_model, f), s_in, dtype),
+        "down": init.normal((e, f, d_model), s_out, dtype),
+    }
+    spec = {
+        "router": {"w": (None, None)},
+        "gate": ("expert", None, "ff"),
+        "up": ("expert", None, "ff"),
+        "down": ("expert", "ff", None),
+    }
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["shared"] = {
+            "gate": {"w": init.normal((d_model, fs), s_in, dtype)},
+            "up": {"w": init.normal((d_model, fs), s_in, dtype)},
+            "down": {"w": init.normal((fs, d_model), s_out, dtype)},
+        }
+        spec["shared"] = {
+            "gate": {"w": (None, "ff")},
+            "up": {"w": (None, "ff")},
+            "down": {"w": ("ff", None)},
+        }
+    return p, spec
+
+
+def _route(cfg: MoEConfig, logits: jax.Array):
+    """Top-k routing -> (weights [b,s,k], indices [b,s,k]) in float32."""
+    if cfg.router == "softmax":
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    elif cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        w = w * cfg.routed_scale
+    else:
+        raise ValueError(cfg.router)
+    return w, idx
+
+
+def moe_apply(p, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """x ``[b, s, d]`` -> ``[b, s, d]``; top-k routed + shared experts."""
+    b, s, d = x.shape
+    e, k, c = cfg.n_experts, cfg.top_k, cfg.capacity(s)
+
+    logits = x.astype(jnp.float32) @ p["router"]["w"]        # [b,s,e]
+    weights, idx = _route(cfg, logits)                       # [b,s,k]
+
+    # --- capacity assignment (Switch-style, per sequence) -------------------
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # [b,s,k,e]
+    # priority: sequence position major, then routing rank
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                        # [b,s*k,e]
+    pos = pos.reshape(b, s, k, e)
+    pos_of = jnp.sum(pos * onehot, axis=-1)                   # [b,s,k]
+    keep = pos_of < c
+    w_kept = weights * keep                                   # dropped -> 0
+
+    # dispatch [b,s,e,c] / combine [b,s,e,c] one-hots.  Both kept in the
+    # activation dtype: a f32 combine tensor drags f32 through the routed
+    # path and doubles the MoE backward's collective bytes (§Perf dsv3
+    # hillclimb); router weights stay exact in the [b,s,k] view.
+    slot = jax.nn.one_hot(jnp.where(keep, pos_of, c), c, dtype=x.dtype)
+    disp = jnp.einsum("bske,bskc->bsec",
+                      onehot.astype(x.dtype) * keep[..., None], slot)
+    comb = jnp.einsum("bske,bskc->bsec",
+                      onehot.astype(x.dtype)
+                      * w_kept[..., None].astype(x.dtype), slot)
+
+    # --- expert compute (free dims: e over 'model', b over 'data') ----------
+    # (§Perf note: constraining the FSDP-stored expert weights to a
+    # gathered view was tried and REFUTED — per-microbatch regathers cost
+    # more than the partial-sum all-reduces they replace.)
+    xe = jnp.einsum("bsec,bsd->ebcd", disp, x)                # [e,b,c,d]
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["gate"])) \
+        * jnp.einsum("ebcd,edf->ebcf", xe, p["up"])
+    ye = jnp.einsum("ebcf,efd->ebcd", h, p["down"])           # [e,b,c,d]
+    out = jnp.einsum("bsec,ebcd->bsd", comb, ye)
+
+    if cfg.n_shared:
+        sh = p["shared"]
+        hs = jax.nn.silu(dense(sh["gate"], x)) * dense(sh["up"], x)
+        out = out + dense(sh["down"], hs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic accounting (profiler / roofline)
+# ---------------------------------------------------------------------------
+
+def moe_param_count(cfg: MoEConfig, d_model: int) -> int:
+    n = d_model * cfg.n_experts                      # router
+    n += 3 * cfg.n_experts * d_model * cfg.d_ff      # routed experts
+    n += 3 * cfg.n_shared * d_model * cfg.d_ff       # shared
+    return n
+
+
+def moe_active_param_count(cfg: MoEConfig, d_model: int) -> int:
+    """Per-token active parameters (for MODEL_FLOPS = 6*N_active*D)."""
+    n = d_model * cfg.n_experts
+    n += 3 * cfg.top_k * d_model * cfg.d_ff
+    n += 3 * cfg.n_shared * d_model * cfg.d_ff
+    return n
+
+
+def moe_fwd_flops(cfg: MoEConfig, d_model: int, tokens: int,
+                  seq_len: int) -> float:
+    """Forward FLOPs actually executed (incl. dispatch/combine einsums)."""
+    c = cfg.capacity(seq_len)
+    e = cfg.n_experts
+    flops = 2.0 * tokens * d_model * e                       # router
+    flops += 2.0 * tokens * e * c * d_model * 2              # dispatch+combine
+    eff = tokens / seq_len * e * c                           # slot-tokens
+    flops += 2.0 * eff * d_model * cfg.d_ff * 3              # expert SwiGLU
+    flops += 2.0 * tokens * d_model * (cfg.n_shared * cfg.d_ff) * 3
+    return flops

@@ -1,0 +1,529 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA.
+
+Layer pattern is 2 recurrent : 1 local-attention (arXiv:2402.19427).  The
+38 layers are organised as 12 scanned **superblocks** of (rec, rec, attn) —
+each sub-block followed by a GeGLU MLP — plus a 2-layer (rec, rec) tail
+stack.  A superblock is one schedulable DreamDDP unit: exactly the
+heterogeneous per-layer cost profile where Algorithm 2 beats the
+equal-number partition.
+
+The RG-LRU recurrence ``h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t)`` runs
+as a ``jax.lax.associative_scan`` for train/prefill (log-depth, TPU
+friendly) and as an O(1) state update for decode — with the 2048-token
+local-attention window this makes ``long_500k`` decoding constant-memory.
+
+Gates use the reference block-diagonal linears (``n_blocks = n_heads``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.partial_sync import UnitEntry, UnitLayout
+from .layers import (Init, apply_rope, dense, dense_init, gqa_attention,
+                     norm_init, rms_norm, rope_freqs, softmax_xent)
+
+__all__ = ["RGConfig", "RGLM", "rg_lru_scan"]
+
+PyTree = Any
+_C = 8.0  # RG-LRU temperature
+
+
+@dataclass(frozen=True)
+class RGConfig:
+    name: str
+    n_layers: int                     # total temporal layers (38)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int                   # 1 (MQA)
+    d_ff: int
+    vocab: int
+    lru_width: int | None = None
+    head_dim: int | None = None
+    window: int = 2048
+    conv_width: int = 4
+    pattern: tuple[str, ...] = ("rec", "rec", "attn")
+    rope_theta: float = 1e4
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    tie_embeddings: bool = True
+
+    @property
+    def lru(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def n_super(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _block_diag(p, x):
+    """Block-diagonal linear: w ``[nb, c, c]``, x ``[..., nb*c]``."""
+    nb, c, _ = p["w"].shape
+    xs = x.reshape(x.shape[:-1] + (nb, c))
+    y = jnp.einsum("...nc,ncd->...nd", xs, p["w"]).reshape(x.shape)
+    return y + p["b"]
+
+
+def rg_lru_scan(log_a: jax.Array, bt: jax.Array,
+                h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """First-order recurrence h_t = exp(log_a_t) h_{t-1} + b_t over axis 1.
+
+    Returns (all h ``[B, L, D]``, final h ``[B, D]``).  ``h0`` optionally
+    seeds the recurrence (decode prefix)."""
+    if h0 is not None:
+        # fold h0 in as a virtual step 0 contribution
+        bt = bt.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    la, hs = jax.lax.associative_scan(combine, (log_a, bt), axis=1)
+    return hs, hs[:, -1]
+
+
+def _rg_lru_apply(p, x, h0=None):
+    """x ``[B, L, lru]`` -> (y, h_final).  Gates + gated recurrence."""
+    r = jax.nn.sigmoid(_block_diag(p["r_gate"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["i_gate"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x.astype(jnp.float32)
+    hs, h_fin = rg_lru_scan(log_a, gated, h0)
+    return hs.astype(x.dtype), h_fin
+
+
+def _rg_lru_step(p, x, h):
+    """One-token step.  x ``[B, lru]``, h ``[B, lru]`` (float32)."""
+    r = jax.nn.sigmoid(_block_diag(p["r_gate"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["i_gate"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * i * x.astype(jnp.float32)
+    return h_new.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class RGLM:
+    def __init__(self, cfg: RGConfig):
+        self.cfg = cfg
+
+    # -- sub-block inits ------------------------------------------------------
+    def _rec_init(self, init: Init):
+        cfg = self.cfg
+        d, lru, nb = cfg.d_model, cfg.lru, cfg.n_heads
+        c = lru // nb
+        gate = lambda: {"w": init.normal((nb, c, c), c ** -0.5, cfg.dtype),
+                        "b": jnp.zeros((lru,), cfg.dtype)}
+        return {
+            "ln": norm_init(d, dtype=cfg.dtype)[0],
+            "in_x": dense_init(init, d, lru, dtype=cfg.dtype,
+                               out_axis="heads")[0],
+            "in_gate": dense_init(init, d, lru, dtype=cfg.dtype,
+                                  out_axis="heads")[0],
+            "conv": init.normal((cfg.conv_width, lru),
+                                cfg.conv_width ** -0.5, cfg.dtype),
+            "conv_bias": jnp.zeros((lru,), cfg.dtype),
+            "r_gate": gate(), "i_gate": gate(),
+            "lam": jnp.linspace(0.9, 4.0, lru, dtype=jnp.float32),
+            "out": dense_init(init, lru, d, dtype=cfg.dtype,
+                              scale=lru ** -0.5, in_axis="heads")[0],
+            "mlp": self._mlp_init(init),
+            "ln_mlp": norm_init(d, dtype=cfg.dtype)[0],
+        }
+
+    def _attn_init(self, init: Init):
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.hd
+        return {
+            "ln": norm_init(d, dtype=cfg.dtype)[0],
+            "wq": dense_init(init, d, cfg.n_heads * hd, dtype=cfg.dtype,
+                             out_axis="heads")[0],
+            "wk": dense_init(init, d, cfg.n_kv_heads * hd,
+                             dtype=cfg.dtype)[0],
+            "wv": dense_init(init, d, cfg.n_kv_heads * hd,
+                             dtype=cfg.dtype)[0],
+            "wo": dense_init(init, cfg.n_heads * hd, d, dtype=cfg.dtype,
+                             scale=(cfg.n_heads * hd) ** -0.5,
+                             in_axis="heads")[0],
+            "mlp": self._mlp_init(init),
+            "ln_mlp": norm_init(d, dtype=cfg.dtype)[0],
+        }
+
+    def _mlp_init(self, init: Init):
+        cfg = self.cfg
+        return {
+            "gate": dense_init(init, cfg.d_model, cfg.d_ff, dtype=cfg.dtype,
+                               out_axis="ff")[0],
+            "up": dense_init(init, cfg.d_model, cfg.d_ff, dtype=cfg.dtype,
+                             out_axis="ff")[0],
+            "down": dense_init(init, cfg.d_ff, cfg.d_model, dtype=cfg.dtype,
+                               scale=cfg.d_ff ** -0.5, in_axis="ff")[0],
+        }
+
+    def _super_init(self, key: jax.Array):
+        init = Init(key)
+        out = {}
+        for j, kind in enumerate(self.cfg.pattern):
+            out[f"sub{j}"] = (self._rec_init(init) if kind == "rec"
+                              else self._attn_init(init))
+        return out
+
+    def init(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        params: dict = {"embed": {"table": Init(k1).normal(
+            (cfg.vocab, cfg.d_model), 1.0, cfg.dtype)}}
+        skeys = jax.random.split(k2, cfg.n_super)
+        params["blocks"] = jax.vmap(self._super_init)(skeys)
+        if cfg.n_tail:
+            tkeys = jax.random.split(k3, cfg.n_tail)
+            params["tail"] = jax.vmap(
+                lambda k: self._rec_init(Init(k)))(tkeys)
+        params["head"] = {"norm": norm_init(cfg.d_model,
+                                            dtype=cfg.dtype)[0]}
+        return params
+
+    def param_specs(self) -> PyTree:
+        """Logical-axis spec tree mirroring ``init`` (structure-derived:
+        2D+ leaves shard their widest dim over ``heads``->model)."""
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+        def one(sds):
+            nd = len(sds.shape)
+            if nd <= 1:
+                return (None,) * nd
+            # stacked leaves: [n_super/n_tail, ...]; shard the largest
+            # trailing dim over the model axis
+            dims = [None] * nd
+            widest = max(range(1, nd), key=lambda i: sds.shape[i])
+            dims[widest] = "heads"
+            dims[0] = "layers"
+            return tuple(dims)
+
+        specs = jax.tree.map(one, shapes)
+        specs["embed"] = {"table": ("vocab", None)}
+        specs["head"] = {"norm": {"scale": (None,)}}
+        return specs
+
+    # -- sub-block applies ----------------------------------------------------
+    def _mlp(self, p, x):
+        h = jax.nn.gelu(dense(p["gate"], x)) * dense(p["up"], x)
+        return dense(p["down"], h)
+
+    def _conv_full(self, p, u):
+        w = p["conv"]
+        width = w.shape[0]
+        pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+        return sum(pad[:, i:i + u.shape[1]] * w[i] for i in range(width)) \
+            + p["conv_bias"]
+
+    def _rec_apply(self, p, x, state=None):
+        """state = (conv_state [B,W-1,lru], h [B,lru]) or None."""
+        cfg = self.cfg
+        xin = rms_norm(p["ln"], x)
+        gate = jax.nn.gelu(dense(p["in_gate"], xin))
+        u = dense(p["in_x"], xin)
+        if state is None:
+            u = self._conv_full(p, u)
+            y, _ = _rg_lru_apply(p, u)
+            new_state = None
+        else:
+            conv_state, h = state
+            hist = jnp.concatenate([conv_state, u], 1)
+            new_conv = hist[:, 1:]
+            u1 = jnp.einsum("bwc,wc->bc", hist, p["conv"]) + p["conv_bias"]
+            y1, h_new = _rg_lru_step(p, u1, h)
+            y = y1[:, None]
+            new_state = (new_conv, h_new.astype(jnp.float32))
+        x = x + dense(p["out"], y * gate)
+        x = x + self._mlp(p["mlp"], rms_norm(p["ln_mlp"], x))
+        return x, new_state
+
+    def _attn_apply(self, p, x, positions, cache=None, write_pos=None):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        hd = cfg.hd
+        xin = rms_norm(p["ln"], x)
+        q = dense(p["wq"], xin).reshape(b, s, cfg.n_heads, hd)
+        k = dense(p["wk"], xin).reshape(b, s, cfg.n_kv_heads, hd)
+        v = dense(p["wv"], xin).reshape(b, s, cfg.n_kv_heads, hd)
+        inv = rope_freqs(hd, cfg.rope_theta)
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+        if cache is None:
+            att = gqa_attention(q, k, v, q_positions=positions,
+                                kv_positions=positions, causal=True,
+                                window=cfg.window)
+            new_cache = None
+        else:
+            # ring-buffer window cache: slot = pos % window
+            slot = write_pos[0] % cfg.window
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], positions.astype(cache["pos"].dtype), slot,
+                axis=1)
+            att = gqa_attention(q, ck, cv, q_positions=positions,
+                                kv_positions=cpos, causal=True,
+                                window=cfg.window)
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+        att = att.reshape(b, s, -1)
+        x = x + dense(p["wo"], att)
+        x = x + self._mlp(p["mlp"], rms_norm(p["ln_mlp"], x))
+        return x, new_cache
+
+    def _super_apply(self, p, x, positions, cache=None, write_pos=None):
+        new_cache = {}
+        for j, kind in enumerate(self.cfg.pattern):
+            sub = p[f"sub{j}"]
+            key = f"sub{j}"
+            if kind == "rec":
+                st = None if cache is None else cache[key]
+                x, ns = self._rec_apply(sub, x, st)
+            else:
+                st = None if cache is None else cache[key]
+                x, ns = self._attn_apply(sub, x, positions, st, write_pos)
+            new_cache[key] = ns
+        return x, (None if cache is None else new_cache)
+
+    # -- full model ----------------------------------------------------------
+    def _backbone(self, params, tokens, cache=None, write_pos=None,
+                  positions=None):
+        cfg = self.cfg
+        x = params["embed"]["table"][tokens] * (cfg.d_model ** 0.5)
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def sup_body(carry, xs):
+            lp, lc = xs
+            fn = self._super_apply
+            if cfg.remat and cache is None:
+                fn = jax.checkpoint(fn)
+            y, nc = fn(lp, carry, positions, lc, write_pos)
+            return y, nc
+
+        sc = None if cache is None else cache["blocks"]
+        x, new_sc = jax.lax.scan(sup_body, x, (params["blocks"], sc))
+        new_cache = None if cache is None else {"blocks": new_sc}
+        if cfg.n_tail:
+            def tail_body(carry, xs):
+                lp, lc = xs
+                fn = self._rec_apply
+                if cfg.remat and cache is None:
+                    fn = jax.checkpoint(fn)
+                return fn(lp, carry, lc)
+            tc = None if cache is None else cache["tail"]
+            x, new_tc = jax.lax.scan(tail_body, x, (params["tail"], tc))
+            if cache is not None:
+                new_cache["tail"] = new_tc
+        return x, new_cache
+
+    def _head(self, params, x):
+        x = rms_norm(params["head"]["norm"], x)
+        return x @ params["embed"]["table"].T
+
+    def apply(self, params, tokens) -> jax.Array:
+        x, _ = self._backbone(params, tokens)
+        return self._head(params, x)
+
+    def loss(self, params, batch, *, segment_cuts=()) -> jax.Array:
+        logits = self.apply(params, batch["tokens"])
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+    # -- serving ---------------------------------------------------------------
+    def _rec_state0(self, batch):
+        cfg = self.cfg
+        return (jnp.zeros((batch, cfg.conv_width - 1, cfg.lru), cfg.dtype),
+                jnp.zeros((batch, cfg.lru), jnp.float32))
+
+    def _attn_cache0(self, batch):
+        cfg = self.cfg
+        w = cfg.window
+        return {"k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+                "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+                "pos": jnp.full((batch, w), -10 ** 9, jnp.int32)}
+
+    def init_cache(self, batch: int, max_seq: int) -> PyTree:
+        cfg = self.cfg
+        one = {f"sub{j}": (self._rec_state0(batch) if kind == "rec"
+                           else self._attn_cache0(batch))
+               for j, kind in enumerate(cfg.pattern)}
+        cache = {"blocks": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_super,) + a.shape),
+            one)}
+        if cfg.n_tail:
+            t = self._rec_state0(batch)
+            cache["tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (cfg.n_tail,) + a.shape), t)
+        return cache
+
+    def prefill(self, params, tokens, cache) -> tuple[jax.Array, PyTree]:
+        """Full-sequence pass that also captures decode states (recurrent h,
+        conv tails, window ring buffers) in one sweep."""
+        x, cache = self._prefill_states(params, tokens, cache)
+        return self._head(params, x[:, -1:]), cache
+
+    def _prefill_states(self, params, tokens, cache) -> PyTree:
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = params["embed"]["table"][tokens] * (cfg.d_model ** 0.5)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def capture_rec(p, x):
+            xin = rms_norm(p["ln"], x)
+            gate = jax.nn.gelu(dense(p["in_gate"], xin))
+            u = dense(p["in_x"], xin)
+            conv_state = jnp.pad(
+                u, ((0, 0), (max(cfg.conv_width - 1 - s, 0), 0), (0, 0))
+            )[:, -(cfg.conv_width - 1):]
+            uc = self._conv_full(p, u)
+            y, h_fin = _rg_lru_apply(p, uc)
+            x = x + dense(p["out"], y * gate)
+            x = x + self._mlp(p["mlp"], rms_norm(p["ln_mlp"], x))
+            return x, (conv_state.astype(cfg.dtype), h_fin)
+
+        def capture_attn(p, x):
+            cfg_ = self.cfg
+            w = cfg_.window
+            xin = rms_norm(p["ln"], x)
+            k = dense(p["wk"], xin).reshape(b, s, cfg_.n_kv_heads, cfg_.hd)
+            v = dense(p["wv"], xin).reshape(b, s, cfg_.n_kv_heads, cfg_.hd)
+            inv = rope_freqs(cfg_.hd, cfg_.rope_theta)
+            k = apply_rope(k, positions, inv)
+            cache_a = self._attn_cache0(b)
+            take = min(s, w)
+            tail_pos = positions[:, -take:]
+            slots = tail_pos[0] % w
+            # scatter tail tokens into their ring slots
+            ck = cache_a["k"].at[:, slots].set(k[:, -take:].astype(cfg_.dtype))
+            cv = cache_a["v"].at[:, slots].set(v[:, -take:].astype(cfg_.dtype))
+            cp = cache_a["pos"].at[:, slots].set(tail_pos)
+            x_full, _ = self._attn_apply(p, x, positions)
+            return x_full, {"k": ck, "v": cv, "pos": cp}
+
+        def sup_body(carry, lp):
+            x = carry
+            states = {}
+            for j, kind in enumerate(cfg.pattern):
+                sub = lp[f"sub{j}"]
+                if kind == "rec":
+                    x, st = capture_rec(sub, x)
+                else:
+                    x, st = capture_attn(sub, x)
+                states[f"sub{j}"] = st
+            return x, states
+
+        x, sup_states = jax.lax.scan(sup_body, x, params["blocks"])
+        new_cache = {"blocks": sup_states}
+        if cfg.n_tail:
+            def tail_body(carry, lp):
+                return capture_rec(lp, carry)
+            x, tail_states = jax.lax.scan(tail_body, x, params["tail"])
+            new_cache["tail"] = tail_states
+        return x, new_cache
+
+    def decode_step(self, params, cache, token, pos
+                    ) -> tuple[jax.Array, PyTree]:
+        x, new_cache = self._backbone(params, token, cache, pos,
+                                      positions=pos[:, None])
+        return self._head(params, x), new_cache
+
+    # -- structure -------------------------------------------------------------
+    def unit_layout(self) -> UnitLayout:
+        cfg = self.cfg
+        entries = [UnitEntry("embed", "embed", None)]
+        entries += [UnitEntry(f"super_{i}", "blocks", i)
+                    for i in range(cfg.n_super)]
+        entries += [UnitEntry(f"tail_{i}", "tail", i)
+                    for i in range(cfg.n_tail)]
+        entries.append(UnitEntry("head", "head", None))
+        return UnitLayout(tuple(entries))
+
+    def _rec_param_count(self) -> int:
+        cfg = self.cfg
+        d, lru, nb = cfg.d_model, cfg.lru, cfg.n_heads
+        n = d + 2 * d * lru                                  # ln + in projs
+        n += cfg.conv_width * lru + lru                      # conv
+        n += 2 * (nb * (lru // nb) ** 2 + lru)               # gates
+        n += lru                                             # lambda
+        n += lru * d                                         # out
+        n += d + 3 * d * cfg.d_ff                            # ln_mlp + mlp
+        return n
+
+    def _attn_param_count(self) -> int:
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.hd
+        n = d + d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) \
+            + cfg.n_heads * hd * d
+        n += d + 3 * d * cfg.d_ff
+        return n
+
+    def _super_param_count(self) -> int:
+        return sum(self._rec_param_count() if k == "rec"
+                   else self._attn_param_count() for k in self.cfg.pattern)
+
+    def param_count(self) -> int:
+        cfg = self.cfg
+        return (cfg.vocab * cfg.d_model
+                + cfg.n_super * self._super_param_count()
+                + cfg.n_tail * self._rec_param_count()
+                + cfg.d_model)
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    def layer_costs(self, batch: int, seq: int, *, mode: str = "train"):
+        cfg = self.cfg
+        tokens = batch * (seq if mode == "train" else 1)
+        att_len = min(seq, cfg.window)
+        out = [("embed", float(cfg.vocab * cfg.d_model),
+                2.0 * tokens * cfg.d_model)]
+        rec_f = 2.0 * tokens * (2 * cfg.d_model * cfg.lru
+                                + 2 * cfg.lru ** 2 / cfg.n_heads
+                                + cfg.lru * cfg.d_model
+                                + 3 * cfg.d_model * cfg.d_ff)
+        attn_f = 2.0 * tokens * (cfg.d_model * cfg.hd
+                                 * (cfg.n_heads + 2 * cfg.n_kv_heads)
+                                 + cfg.n_heads * cfg.hd * cfg.d_model
+                                 + 3 * cfg.d_model * cfg.d_ff) \
+            + 2.0 * tokens * att_len * cfg.n_heads * cfg.hd * 2
+        sup_f = sum(rec_f if k == "rec" else attn_f for k in cfg.pattern)
+        for i in range(cfg.n_super):
+            out.append((f"super_{i}", float(self._super_param_count()),
+                        sup_f))
+        for i in range(cfg.n_tail):
+            out.append((f"tail_{i}", float(self._rec_param_count()), rec_f))
+        out.append(("head", float(cfg.d_model),
+                    2.0 * tokens * cfg.d_model * cfg.vocab))
+        return out

@@ -1,0 +1,3 @@
+from .optimizers import OptConfig, Optimizer, lr_schedule, make_optimizer
+
+__all__ = ["OptConfig", "Optimizer", "lr_schedule", "make_optimizer"]

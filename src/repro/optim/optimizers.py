@@ -1,0 +1,219 @@
+"""Optimizers (pure functional, worker-stacked-tree friendly).
+
+All updates are elementwise over leaves, so the same code serves plain and
+worker-stacked parameter trees (the local step of LSGD runs per worker with
+no cross-worker reduction — that is the point of the paper).
+
+Adafactor factors the second moment over the last two axes — with stacked
+block leaves ``[W, n_layers, a, b]`` that is exactly the weight matrix, so
+optimizer state is ~``(a+b)/(a*b)`` of Adam's.  It is the default for the
+``large`` archs (DESIGN.md §7 memory plan).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "Optimizer", "make_optimizer", "lr_schedule"]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"                 # sgd | momentum | adam | adamw | adafactor
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # adafactor
+    factored_min_dim: int = 8
+    decay_rate: float = 0.8
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to ``min_lr_ratio * lr``."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _clip(grads: PyTree, max_norm: float) -> PyTree:
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads)
+
+
+class Optimizer(NamedTuple):
+    cfg: OptConfig
+    init: Any                  # params -> state
+    update: Any                # (grads, state, params, step) -> (params, state)
+
+
+# ---------------------------------------------------------------------------
+# SGD / momentum
+# ---------------------------------------------------------------------------
+
+def _make_sgd(cfg: OptConfig, nesterov_momentum: bool) -> Optimizer:
+    def init(params):
+        if not nesterov_momentum:
+            return {}
+        return {"m": jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_schedule(cfg, step)
+        g = _clip(grads, cfg.grad_clip) if cfg.grad_clip else grads
+        if not nesterov_momentum:
+            new = jax.tree.map(
+                lambda p, gg: (p.astype(jnp.float32) - lr * gg
+                               ).astype(p.dtype), params, g)
+            return new, state
+        m_new = jax.tree.map(lambda m, gg: cfg.momentum * m + gg,
+                             state["m"], g)
+        new = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, m_new)
+        return new, {"m": m_new}
+
+    return Optimizer(cfg, init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def _make_adam(cfg: OptConfig, decoupled_wd: bool) -> Optimizer:
+    def init(params):
+        z = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_schedule(cfg, step)
+        g = _clip(grads, cfg.grad_clip) if cfg.grad_clip else \
+            jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.beta1 ** t
+        bc2 = 1.0 - cfg.beta2 ** t
+
+        def upd(p, gg, m, v):
+            m2 = cfg.beta1 * m + (1 - cfg.beta1) * gg
+            v2 = cfg.beta2 * v + (1 - cfg.beta2) * gg * gg
+            upd_ = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+            pf = p.astype(jnp.float32)
+            if decoupled_wd and cfg.weight_decay:
+                pf = pf * (1.0 - lr * cfg.weight_decay)
+            return (pf - lr * upd_).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, g, state["m"], state["v"])
+        is3 = lambda t_: isinstance(t_, tuple) and len(t_) == 3
+        new = jax.tree.map(lambda t_: t_[0], out, is_leaf=is3)
+        m = jax.tree.map(lambda t_: t_[1], out, is_leaf=is3)
+        v = jax.tree.map(lambda t_: t_[2], out, is_leaf=is3)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(cfg, init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment over the trailing two axes)
+# ---------------------------------------------------------------------------
+
+def _factored(x: jax.Array, min_dim: int) -> bool:
+    return x.ndim >= 2 and x.shape[-1] >= min_dim and x.shape[-2] >= min_dim
+
+
+def _make_adafactor(cfg: OptConfig) -> Optimizer:
+    def init(params):
+        def one(x):
+            if _factored(x, cfg.factored_min_dim):
+                return {
+                    "vr": jnp.zeros(x.shape[:-1], jnp.float32),       # row
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:],
+                                    jnp.float32),                     # col
+                }
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params),
+                "m": jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                if cfg.beta1 else None}
+
+    def update(grads, state, params, step):
+        lr = lr_schedule(cfg, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2t = 1.0 - t ** (-cfg.decay_rate)
+        g = _clip(grads, cfg.grad_clip) if cfg.grad_clip else \
+            jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+
+        def upd(p, gg, v, m):
+            g2 = gg * gg + 1e-30
+            if "vr" in v:
+                vr = beta2t * v["vr"] + (1 - beta2t) * jnp.mean(g2, -1)
+                vc = beta2t * v["vc"] + (1 - beta2t) * jnp.mean(g2, -2)
+                rms_r = vr / jnp.mean(vr, -1, keepdims=True)
+                precond = gg / (jnp.sqrt(rms_r)[..., None]
+                                * jnp.sqrt(vc)[..., None, :] + cfg.eps)
+                v_new = {"vr": vr, "vc": vc}
+            else:
+                vf = beta2t * v["v"] + (1 - beta2t) * g2
+                precond = gg / (jnp.sqrt(vf) + cfg.eps)
+                v_new = {"v": vf}
+            # update clipping (Adafactor's RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(precond * precond) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms)
+            if m is not None:
+                m = cfg.beta1 * m + (1 - cfg.beta1) * precond
+                precond = m
+            pf = p.astype(jnp.float32)
+            if cfg.weight_decay:
+                pf = pf * (1.0 - lr * cfg.weight_decay)
+            return (pf - lr * precond).astype(p.dtype), v_new, m
+
+        ms = (state["m"] if state["m"] is not None
+              else jax.tree.map(lambda _: None, params))
+        out = jax.tree.map(upd, params, g, state["v"], ms,
+                           is_leaf=lambda x: x is None)
+        # out leaves are 3-tuples; state["v"] subdicts already consumed
+        is3 = lambda t_: isinstance(t_, tuple) and len(t_) == 3
+        new = jax.tree.map(lambda t_: t_[0], out, is_leaf=is3)
+        v = jax.tree.map(lambda t_: t_[1], out, is_leaf=is3)
+        m = (jax.tree.map(lambda t_: t_[2], out, is_leaf=is3)
+             if state["m"] is not None else None)
+        return new, {"v": v, "m": m}
+
+    return Optimizer(cfg, init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    cfg = OptConfig(name=name, **kw)
+    if name == "sgd":
+        return _make_sgd(cfg, nesterov_momentum=False)
+    if name == "momentum":
+        return _make_sgd(cfg, nesterov_momentum=True)
+    if name == "adam":
+        return _make_adam(cfg, decoupled_wd=False)
+    if name == "adamw":
+        return _make_adam(cfg, decoupled_wd=True)
+    if name == "adafactor":
+        return _make_adafactor(cfg)
+    raise ValueError(f"unknown optimizer {name!r}")

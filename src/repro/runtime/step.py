@@ -1,0 +1,206 @@
+"""Phase-specialized train/serve step builders.
+
+DreamDDP compiles **one executable per phase** of the synchronization
+period: the phase's layer interval is baked in as static slices, so the
+emitted HLO contains exactly the scheduled collective bytes, and the block
+stack is split (``segment_cuts``) at the interval boundary so the phase's
+parameter all-reduce is data-independent of the remaining backward segments
+— the overlap window XLA's latency-hiding scheduler uses (DESIGN.md §2).
+
+Semantics per algorithm (``plan.algo``):
+
+* ``ssgd`` / ``wfbp`` / ``ascwfbp`` — gradients are worker-averaged every
+  step *before* the optimizer (classic DDP; wfbp variants differ only in
+  the simulated time model, the SPMD execution is identical);
+* ``flsgd`` / ``plsgd-enp`` / ``dreamddp`` — local update first, then the
+  phase's layer units are parameter-averaged (Eq. 5), optionally through
+  int8+error-feedback compression or a DiLoCo-style outer optimizer
+  (both beyond-paper, off by default).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.outer_opt import OuterConfig, OuterState, outer_init, \
+    outer_sync_units
+from ..core.partial_sync import (UnitLayout, contiguous_ranges, divergence,
+                                 sync_units, tree_worker_mean)
+from ..core.plans import SyncPlan
+from ..optim.optimizers import Optimizer
+
+__all__ = ["TrainState", "StepConfig", "init_train_state",
+           "make_train_step", "make_phase_steps", "make_prefill_step",
+           "make_decode_step"]
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree                    # worker-stacked [W, ...]
+    opt_state: PyTree
+    step: jax.Array
+    ef: PyTree | None = None          # int8 error-feedback residuals
+    outer: OuterState | None = None   # DiLoCo outer state
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    n_microbatches: int = 1
+    compress: str | None = None       # None | "int8_ef"
+    outer: bool = False               # DiLoCo outer optimizer on syncs
+    outer_cfg: OuterConfig = OuterConfig()
+    track_divergence: bool = False
+    segment_cuts: bool = True         # split scans at the sync interval
+
+
+def init_train_state(model, optimizer: Optimizer, key, n_workers: int,
+                     *, cfg: StepConfig = StepConfig()) -> TrainState:
+    """Identical initial replicas (workers start at a sync point)."""
+    from ..core.partial_sync import worker_stack
+    params = worker_stack(model.init(key), n_workers)
+    opt_state = optimizer.init(params)
+    ef = (jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+          if cfg.compress == "int8_ef" else None)
+    outer = outer_init(params) if cfg.outer else None
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32), ef,
+                      outer)
+
+
+# ---------------------------------------------------------------------------
+# Compressed partial sync (int8 + EF over the worker axis)
+# ---------------------------------------------------------------------------
+
+def _sync_units_ef(params: PyTree, ef: PyTree, unit_ids, layout: UnitLayout
+                   ) -> tuple[PyTree, PyTree]:
+    from ..parallel.compression import compressed_worker_mean
+    grouped = layout.by_group(unit_ids)
+    new_p, new_e = dict(params), dict(ef)
+    for group, idxs in grouped.items():
+        p, e = params[group], ef[group]
+        if idxs == [None]:
+            pair = jax.tree.map(compressed_worker_mean, p, e)
+            is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+            new_p[group] = jax.tree.map(lambda t: t[0], pair, is_leaf=is2)
+            new_e[group] = jax.tree.map(lambda t: t[1], pair, is_leaf=is2)
+            continue
+        ranges = contiguous_ranges([i for i in idxs if i is not None])
+
+        def one(p_, e_):
+            for lo, hi in ranges:
+                s, r = compressed_worker_mean(p_[:, lo:hi], e_[:, lo:hi])
+                p_ = p_.at[:, lo:hi].set(s)
+                e_ = e_.at[:, lo:hi].set(r)
+            return p_, e_
+
+        pair = jax.tree.map(one, p, e)
+        is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+        new_p[group] = jax.tree.map(lambda t: t[0], pair, is_leaf=is2)
+        new_e[group] = jax.tree.map(lambda t: t[1], pair, is_leaf=is2)
+    return new_p, new_e
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def _cuts_for(units, layout: UnitLayout) -> tuple[int, ...]:
+    """Segment-cut unit ids: boundaries of the synced intervals."""
+    cuts = set()
+    for lo, hi in contiguous_ranges(list(units)):
+        cuts.add(lo)
+        cuts.add(hi)
+    return tuple(sorted(cuts))
+
+
+def make_train_step(model, optimizer: Optimizer, plan: SyncPlan, phase: int,
+                    *, cfg: StepConfig = StepConfig(),
+                    donate: bool = True):
+    """Build the jittable step for one phase (phase is STATIC)."""
+    layout = model.unit_layout()
+    units = plan.units_for_phase(phase)
+    cuts = _cuts_for(units, layout) if cfg.segment_cuts else ()
+
+    def per_worker_grads(params, batch):
+        """Per-worker loss+grads.  With ``n_microbatches > 1`` the batch
+        arrives PRE-microbatched ``[n_micro, B_micro, ...]`` (the data
+        pipeline / cell builder adds the axis, keeping shardings static
+        through the accumulation scan)."""
+        loss_fn = functools.partial(model.loss, segment_cuts=cuts)
+        if cfg.n_microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def body(acc, mbatch):
+            l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            return (acc[0] + l,
+                    jax.tree.map(jnp.add, acc[1], g)), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                             params))
+        (loss, grads), _ = jax.lax.scan(body, zero, batch)
+        inv = 1.0 / cfg.n_microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch: PyTree
+                   ) -> tuple[TrainState, dict]:
+        losses, grads = jax.vmap(per_worker_grads)(state.params, batch)
+        metrics = {"loss": jnp.mean(losses)}
+
+        if not plan.is_parameter_sync:
+            grads = tree_worker_mean(grads)      # S-SGD: gradient all-reduce
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, state.step)
+        new_ef, new_outer = state.ef, state.outer
+        if plan.is_parameter_sync and units:
+            if cfg.outer:
+                new_params, new_outer = outer_sync_units(
+                    new_params, state.outer, units, layout, cfg.outer_cfg)
+            elif cfg.compress == "int8_ef":
+                new_params, new_ef = _sync_units_ef(
+                    new_params, state.ef, units, layout)
+            else:
+                new_params = sync_units(new_params, units, layout)
+        if cfg.track_divergence:
+            metrics["divergence"] = divergence(new_params)
+        new_state = TrainState(new_params, new_opt, state.step + 1,
+                               new_ef, new_outer)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_phase_steps(model, optimizer: Optimizer, plan: SyncPlan, *,
+                     cfg: StepConfig = StepConfig()):
+    """One step function per phase of the period (all static)."""
+    return [make_train_step(model, optimizer, plan, h, cfg=cfg)
+            for h in range(plan.H)]
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model, *, with_frontend: str | None = None):
+    if with_frontend == "audio":
+        def prefill(params, tokens, cache, frames):
+            return model.prefill(params, tokens, cache, frames)
+    elif with_frontend == "vision":
+        def prefill(params, tokens, cache, embeds):
+            return model.prefill(params, tokens, cache, embeds=embeds)
+    else:
+        def prefill(params, tokens, cache):
+            return model.prefill(params, tokens, cache)
+    return prefill
+
+
+def make_decode_step(model):
+    def decode(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+    return decode

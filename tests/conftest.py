@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(only launch/dryrun.py forces 512)."""
+
+import random
+
+import pytest
+
+from repro.core.profiler import HardwareSpec, analytic_profile
+
+
+def random_profile(n_layers: int, *, seed: int = 0, bandwidth: float = 1e9,
+                   n_workers: int = 8, flop_lo: float = 1e9,
+                   flop_hi: float = 8e10, par_lo: float = 1e6,
+                   par_hi: float = 5e7):
+    rng = random.Random(seed)
+    hw = HardwareSpec(bandwidth=bandwidth, n_workers=n_workers,
+                      latency=1e-4)
+    layers = [(f"l{i}", rng.uniform(par_lo, par_hi),
+               rng.uniform(flop_lo, flop_hi)) for i in range(n_layers)]
+    return analytic_profile(layers, hw)
+
+
+@pytest.fixture
+def profile12():
+    return random_profile(12)

@@ -1,0 +1,46 @@
+"""§3.4 bubble filling: Eq. 12 admission + no-slowdown guarantee."""
+
+import pytest
+
+from repro.core.bubble_fill import fill_bubbles
+from repro.core.schedule import dreamddp_schedule
+from repro.core.time_model import simulate_period
+
+from conftest import random_profile
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("mode", ["eq12", "exact"])
+@pytest.mark.parametrize("bandwidth", [1e9, 2e10])
+def test_fills_never_slow_down_period(seed, mode, bandwidth):
+    prof = random_profile(16, seed=seed, bandwidth=bandwidth)
+    res = dreamddp_schedule(prof, 4)
+    fills = fill_bubbles(prof, res.partition, mode=mode)
+    base = sum(t.iteration_time
+               for t in simulate_period(prof, res.partition))
+    filled = sum(t.iteration_time
+                 for t in simulate_period(prof, res.partition, fills.fills))
+    assert filled <= base + 1e-9
+
+
+def test_fills_are_late_layers():
+    """The supplement targets output-most layers (paper: late layers
+    converge last and benefit most)."""
+    prof = random_profile(16, seed=1, bandwidth=5e10)
+    res = dreamddp_schedule(prof, 4)
+    fills = fill_bubbles(prof, res.partition, mode="exact")
+    for extra in fills.fills:
+        # BP positions form a prefix (0 = output-most), possibly with the
+        # phase's own interval skipped
+        if extra:
+            assert extra == sorted(extra)
+            assert extra[0] <= 2
+
+
+def test_sync_counts_at_least_one():
+    prof = random_profile(10, seed=2, bandwidth=2e10)
+    res = dreamddp_schedule(prof, 5)
+    fills = fill_bubbles(prof, res.partition)
+    counts = fills.sync_counts(res.partition)
+    assert all(c >= 1 for c in counts)
+    assert sum(counts) == 10 + fills.extra_syncs

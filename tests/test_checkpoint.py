@@ -1,0 +1,70 @@
+"""Checkpoint manager: roundtrip, keep-k, atomicity, elastic reshard."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, reshard_workers
+
+
+def _state(key, w=4):
+    return {
+        "params": {"a": jax.random.normal(key, (w, 3, 5)),
+                   "b": jax.random.normal(key, (w, 7))},
+        "step": jnp.asarray(13, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    s = _state(jax.random.PRNGKey(0))
+    ck.save(10, s, meta={"x": 1}, block=True)
+    step, got, meta = ck.restore(s)
+    assert step == 10 and meta == {"x": 1}
+    for a, b in zip(jax.tree_util.tree_leaves(s),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    s = _state(jax.random.PRNGKey(1))
+    for step in (1, 2, 3, 4):
+        ck.save(step, s, block=True)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+    assert ck.latest_step() == 4
+
+
+def test_no_tmp_left_behind(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(5, _state(jax.random.PRNGKey(2)), block=True)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = CheckpointManager(str(tmp_path), async_save=True)
+    ck.save(7, _state(jax.random.PRNGKey(3)))
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_restore_missing(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore({"a": jnp.zeros(1)})
+
+
+def test_reshard_workers_mean_property():
+    s = _state(jax.random.PRNGKey(4), w=4)
+    out = reshard_workers(s["params"], 6)
+    for k in ("a", "b"):
+        assert out[k].shape[0] == 6
+        # every new replica equals the old mean
+        want = np.asarray(s["params"][k]).mean(0)
+        for i in range(6):
+            np.testing.assert_allclose(np.asarray(out[k][i]), want,
+                                       rtol=1e-6)

@@ -1,0 +1,72 @@
+"""Loop-aware executed-cost parser on a synthetic HLO module."""
+
+from repro.analysis.hlo_costs import parse_module_costs
+
+# entry -> while(trip=4) -> body contains a dot and an all-reduce;
+# plus one top-level dot.
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %c = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%add, metadata={op_name="jit(f)/dot_general"}
+  %one = s32[] constant(1)
+  %c2 = s32[] add(%c, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%c2, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %c = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%c, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %w2 = f32[16,16]{1,0} constant({...})
+  %d0 = f32[8,16]{1,0} dot(%arg, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %d0)
+  %wh = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"},"known_init_step":{"init":"0","step":"1"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_flops_multiplied_by_trip_count():
+    c = parse_module_costs(HLO)
+    one_dot = 2 * 8 * 16 * 16          # 4096
+    # entry dot once + body dot x4
+    assert c.flops == one_dot * 5
+    assert c.n_dots == 2
+    assert c.unknown_loops == 0
+
+
+def test_collectives_multiplied():
+    c = parse_module_costs(HLO)
+    ars = [o for o in c.collectives.ops if o.kind == "all-reduce"]
+    assert len(ars) == 4               # one static site x 4 trips
+    assert all(o.group_size == 4 for o in ars)
+    assert all(o.f32_dot_partial for o in ars)
+    # TPU adjustment halves f32 dot-partial all-reduces
+    assert c.collectives.total_wire_bytes_tpu == \
+        c.collectives.total_wire_bytes / 2
+
+
+def test_bytes_counts_costed_ops_only():
+    c = parse_module_costs(HLO)
+    # dots: (operands + result) bytes; tuples/gte/constants free
+    dot_bytes = (8 * 16 + 16 * 16 + 8 * 16) * 4
+    ar_bytes = 2 * 8 * 16 * 4          # operand + result
+    assert c.bytes_accessed == dot_bytes * 5 + ar_bytes * 4

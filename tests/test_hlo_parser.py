@@ -1,0 +1,51 @@
+"""HLO collective parser on representative optimized-HLO lines."""
+
+from repro.analysis.hlo import parse_collectives
+
+HLO = """
+HloModule jit_step
+  %ar = bf16[128,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = f32[64,512]{1,0} all-gather-start(%y), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %ag.done = f32[64,512]{1,0} all-gather-done(%ag.1)
+  %rs = bf16[32]{0} reduce-scatter(%z), replica_groups=[2,8]<=[16], dimensions={0}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%p, %q), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = u32[4]{0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+"""
+
+
+def test_parses_all_collective_kinds():
+    s = parse_collectives(HLO)
+    kinds = sorted(o.kind for o in s.ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+
+
+def test_done_ops_not_double_counted():
+    s = parse_collectives(HLO)
+    assert sum(1 for o in s.ops if o.kind == "all-gather") == 1
+
+
+def test_bytes_and_groups():
+    s = parse_collectives(HLO)
+    by = {o.kind: o for o in s.ops}
+    ar = by["all-reduce"]
+    assert ar.result_bytes == 128 * 1024 * 2 and ar.group_size == 4
+    assert ar.wire_bytes == 2 * 3 / 4 * ar.result_bytes
+    ag = by["all-gather"]
+    assert ag.group_size == 2
+    rs = by["reduce-scatter"]
+    assert rs.group_size == 8 and rs.result_bytes == 32 * 2
+    assert rs.wire_bytes == 7 * rs.result_bytes
+    a2a = by["all-to-all"]
+    assert a2a.result_bytes == 2 * 16 * 16 * 4     # tuple shape summed
+    cp = by["collective-permute"]
+    assert cp.wire_bytes == cp.result_bytes == 16
+
+
+def test_summary_aggregation():
+    s = parse_collectives(HLO)
+    agg = s.by_kind()
+    assert agg["all-reduce"]["count"] == 1
+    assert s.total_wire_bytes > 0
+    assert s.to_dict()["n_ops"] == 5

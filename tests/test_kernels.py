@@ -1,0 +1,144 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.fused_adam_sync import adamw_ref, fused_adamw_step
+from repro.kernels.int8_quant import (dequantize, quantize,
+                                      quantize_rows_ref)
+from repro.kernels.ssd_scan import ssd_chunk, ssd_chunk_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,nq,nkv,hd", [
+    (1, 128, 4, 2, 32),
+    (2, 192, 8, 8, 16),     # MHA
+    (1, 256, 4, 1, 64),     # MQA
+    (2, 100, 6, 2, 8),      # ragged seq (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, sq, nq, nkv, hd, dtype):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(sq + nq), 3)
+    q = jax.random.normal(k0, (b, sq, nq, hd), dtype)
+    k = jax.random.normal(k1, (b, sq, nkv, hd), dtype)
+    v = jax.random.normal(k2, (b, sq, nkv, hd), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_non_causal():
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (1, 128, 2, 16))
+    out = flash_attention(q, q, q, causal=False, block_q=64, block_k=64)
+    ref = attention_ref(q, q, q, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64,), (300, 17), (5, 33, 9)])
+@pytest.mark.parametrize("pdtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("step", [0, 100])
+def test_fused_adamw_sweep(shape, pdtype, step):
+    k = jax.random.PRNGKey(42)
+    p = jax.random.normal(k, shape, pdtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    m = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), shape,
+                                  jnp.float32)) * 0.01
+    got = fused_adamw_step(p, g, m, v, 1e-3, step, weight_decay=0.1)
+    want = adamw_ref(p, g, m, v, lr=1e-3, step=step, weight_decay=0.1)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,NC,H,cs,p,n", [
+    (1, 2, 2, 8, 8, 8),
+    (2, 3, 4, 16, 8, 16),
+    (1, 1, 8, 32, 16, 8),
+])
+def test_ssd_chunk_sweep(B, NC, H, cs, p, n):
+    k = jax.random.PRNGKey(B * NC * H)
+    x = jax.random.normal(k, (B, NC, H, cs, p))
+    bb = jax.random.normal(jax.random.PRNGKey(1), (B, NC, H, cs, n))
+    cc = jax.random.normal(jax.random.PRNGKey(2), (B, NC, H, cs, n))
+    da = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3),
+                                            (B, NC, H, cs)))
+    y, s = ssd_chunk(x, bb, cc, da)
+    yr, sr = ssd_chunk_ref(x, bb, cc, da)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_ssd_chunk_matches_model_oracle():
+    """Kernel intra-chunk part == models.mamba2.ssd_chunked with a single
+    chunk and zero initial state."""
+    from repro.models.mamba2 import ssd_chunked
+    B, H, cs, p, n = 2, 4, 16, 8, 16
+    k = jax.random.PRNGKey(7)
+    x = jax.random.normal(k, (B, cs, H, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (B, cs, H)))
+    a_log = jnp.log(jnp.linspace(1, 4, H))
+    bmat = jax.random.normal(jax.random.PRNGKey(2), (B, cs, 1, n))
+    cmat = jax.random.normal(jax.random.PRNGKey(3), (B, cs, 1, n))
+    y_full, state = ssd_chunked(x, dt, a_log, bmat, cmat, chunk=cs)
+
+    xdt = (x * dt[..., None]).reshape(B, 1, cs, H, p).swapaxes(2, 3)
+    da = (dt * -jnp.exp(a_log)).reshape(B, 1, cs, H).swapaxes(2, 3)
+    bq = jnp.repeat(bmat, H, 2).reshape(B, 1, cs, H, n).swapaxes(2, 3)
+    cq = jnp.repeat(cmat, H, 2).reshape(B, 1, cs, H, n).swapaxes(2, 3)
+    y_k, s_k = ssd_chunk(xdt, bq, cq, da)
+    np.testing.assert_allclose(
+        np.asarray(y_k[:, 0].swapaxes(1, 2)), np.asarray(y_full),
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(s_k[:, 0]), np.asarray(state), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,c", [(8, 16), (77, 33), (256, 128)])
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 100.0])
+def test_int8_quant_sweep(r, c, scale):
+    x = jax.random.normal(jax.random.PRNGKey(r * c), (r, c)) * scale
+    q, s = quantize(x)
+    qr, sr = quantize_rows_ref(x)
+    # rounding ties may differ by 1 quantum on <0.1% of elements
+    # (float associativity between the padded-kernel and ref paths)
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert diff.max() <= 1 and (diff > 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float((err <= s * 0.5 + 1e-9).mean()) > 0.999
+    assert float((err <= s * 0.51 + 1e-9).mean()) == 1.0
+
+
+def test_int8_quant_zero_rows():
+    x = jnp.zeros((4, 8))
+    q, s = quantize(x)
+    assert int(jnp.abs(q).max()) == 0
+    np.testing.assert_allclose(np.asarray(dequantize(q, s)), 0.0)

@@ -1,0 +1,103 @@
+"""Worker-stacked pytree partial synchronization semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partial_sync import (UnitEntry, UnitLayout,
+                                     contiguous_ranges, divergence,
+                                     sync_units, tree_worker_mean,
+                                     unit_divergence, worker_stack,
+                                     worker_unstack)
+
+
+def _layout():
+    return UnitLayout((
+        UnitEntry("embed", "embed", None),
+        UnitEntry("l0", "blocks", 0),
+        UnitEntry("l1", "blocks", 1),
+        UnitEntry("l2", "blocks", 2),
+        UnitEntry("head", "head", None),
+    ))
+
+
+def _params(key, w=4):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": {"table": jax.random.normal(k1, (w, 8, 4))},
+        "blocks": {"w": jax.random.normal(k2, (w, 3, 4, 4)),
+                   "b": jax.random.normal(k3, (w, 3, 4))},
+        "head": {"out": jax.random.normal(k1, (w, 4, 8))},
+    }
+
+
+def test_sync_selected_units_only():
+    p = _params(jax.random.PRNGKey(0))
+    out = sync_units(p, [1, 2], _layout())
+    # blocks 0,1 synced: identical across workers
+    for leaf in ("w", "b"):
+        synced = out["blocks"][leaf][:, 0:2]
+        np.testing.assert_allclose(np.asarray(synced - synced[:1]), 0.0,
+                                   atol=1e-6)
+        # block 2 untouched
+        np.testing.assert_array_equal(np.asarray(out["blocks"][leaf][:, 2]),
+                                      np.asarray(p["blocks"][leaf][:, 2]))
+    np.testing.assert_array_equal(np.asarray(out["embed"]["table"]),
+                                  np.asarray(p["embed"]["table"]))
+
+
+def test_sync_preserves_mean():
+    """Averaging preserves the worker mean of every synced leaf."""
+    p = _params(jax.random.PRNGKey(1))
+    out = sync_units(p, [0, 2, 4], _layout())
+    for (ka, a), (kb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(p),
+            jax.tree_util.tree_leaves_with_path(out)):
+        np.testing.assert_allclose(np.asarray(a.mean(0)),
+                                   np.asarray(b.mean(0)), atol=1e-5)
+
+
+def test_full_sync_kills_divergence():
+    p = _params(jax.random.PRNGKey(2))
+    assert float(divergence(p)) > 0.1
+    synced = tree_worker_mean(p)
+    assert float(divergence(synced)) < 1e-10
+
+
+def test_unit_divergence_vector():
+    p = _params(jax.random.PRNGKey(3))
+    layout = _layout()
+    before = unit_divergence(p, layout)
+    out = sync_units(p, [1], layout)
+    after = unit_divergence(out, layout)
+    assert float(after[1]) < 1e-10
+    np.testing.assert_allclose(np.asarray(after[0]), np.asarray(before[0]),
+                               rtol=1e-6)
+
+
+def test_worker_stack_roundtrip():
+    p = {"a": jnp.arange(6.0).reshape(2, 3)}
+    s = worker_stack(p, 5)
+    assert s["a"].shape == (5, 2, 3)
+    np.testing.assert_array_equal(np.asarray(worker_unstack(s, 3)["a"]),
+                                  np.asarray(p["a"]))
+    assert float(divergence(s)) == 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=20))
+def test_contiguous_ranges_property(xs):
+    rs = contiguous_ranges(xs)
+    covered = sorted(i for lo, hi in rs for i in range(lo, hi))
+    assert covered == sorted(set(xs))
+    # ranges are disjoint, ordered, non-adjacent
+    for (l1, h1), (l2, h2) in zip(rs, rs[1:]):
+        assert h1 < l2
+
+
+def test_bad_layout_raises():
+    layout = UnitLayout((UnitEntry("x", "missing", None),))
+    with pytest.raises(KeyError):
+        layout.validate_against({"blocks": {}})

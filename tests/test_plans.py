@@ -1,0 +1,58 @@
+"""SyncPlan construction, validation and serialization."""
+
+import pytest
+
+from repro.core.plans import ALGOS, SyncPlan, build_plan
+
+from conftest import random_profile
+
+
+@pytest.mark.parametrize("algo", ["flsgd", "plsgd-enp", "dreamddp"])
+def test_every_unit_syncs_once_per_period(algo):
+    prof = random_profile(14, seed=3)
+    plan = build_plan(algo, prof, 4)
+    freq = plan.sync_frequency()
+    assert all(f >= 1 for f in freq)
+    if algo != "dreamddp":                       # no fills -> exactly once
+        assert all(f == 1 for f in freq)
+
+
+def test_dreamddp_fills_raise_frequency():
+    prof = random_profile(14, seed=4, bandwidth=5e10)   # compute-dominated
+    plan = build_plan("dreamddp", prof, 5)
+    assert plan.meta["extra_syncs"] == sum(plan.sync_frequency()) - 14
+
+
+def test_ssgd_plan_shape():
+    prof = random_profile(6)
+    plan = build_plan("ssgd", prof, 5)
+    assert plan.H == 1 and plan.phase_units == (tuple(range(6)),)
+    assert not plan.is_parameter_sync
+
+
+def test_flsgd_sync_in_last_phase():
+    prof = random_profile(6)
+    plan = build_plan("flsgd", prof, 3)
+    assert plan.phase_units[0] == () and plan.phase_units[1] == ()
+    assert plan.phase_units[2] == tuple(range(6))
+
+
+def test_json_roundtrip():
+    prof = random_profile(9, seed=5)
+    plan = build_plan("dreamddp", prof, 3)
+    plan2 = SyncPlan.from_json(plan.to_json())
+    assert plan2 == plan
+    assert plan2.fingerprint() == plan.fingerprint()
+
+
+def test_missing_unit_rejected():
+    with pytest.raises(ValueError, match="never synchronizes"):
+        SyncPlan(algo="flsgd", H=2, n_units=3,
+                 phase_units=((0,), (1,)), fill_units=((), ()))
+
+
+def test_unknown_algo():
+    prof = random_profile(4)
+    with pytest.raises(ValueError):
+        build_plan("nope", prof, 2)
+    assert "dreamddp" in ALGOS

@@ -1,0 +1,83 @@
+"""Algorithm 2 scheduler: optimality vs brute force + search invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (brute_force_count, brute_force_schedule,
+                                 dreamddp_schedule, enp_schedule)
+from repro.core.time_model import Partition, objective
+
+from conftest import random_profile
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("bandwidth", [1e8, 1e9, 2e10])
+@pytest.mark.parametrize("H", [2, 3, 5])
+def test_dreamddp_matches_brute_force(seed, bandwidth, H):
+    """Fig. 15: Algorithm 2 finds (near-)optimal schedules.  We assert
+    within 2% of the brute-force optimum across bandwidth regimes."""
+    prof = random_profile(10, seed=seed, bandwidth=bandwidth)
+    bf = brute_force_schedule(prof, H)
+    dd = dreamddp_schedule(prof, H)
+    assert dd.objective <= bf.objective * 1.02 + 1e-12
+    assert dd.objective >= bf.objective - 1e-12      # bf is the optimum
+
+
+@pytest.mark.parametrize("H", [2, 4, 7])
+def test_partition_covers_all_layers(profile12, H):
+    for fn in (dreamddp_schedule, enp_schedule):
+        res = fn(profile12, H)
+        assert res.partition.n_layers == len(profile12)
+        assert res.partition.n_phases == H
+
+
+def test_enp_equal_counts(profile12):
+    res = enp_schedule(profile12, 4)
+    counts = res.partition.counts
+    assert max(counts) - min(counts) <= 1
+    assert sum(counts) == 12
+
+
+def test_search_space_bound(profile12):
+    """|Omega| <= 2^min(L-H, H) (paper complexity claim)."""
+    for H in (2, 3, 5, 8):
+        res = dreamddp_schedule(profile12, H)
+        assert res.stats.solutions <= 2 ** min(12 - H, H) + 1
+
+
+def test_dreamddp_beats_or_ties_enp(profile12):
+    for H in (2, 3, 5):
+        dd = dreamddp_schedule(profile12, H)
+        enp = enp_schedule(profile12, H)
+        assert dd.objective <= enp.objective + 1e-12
+
+
+def test_brute_force_count():
+    assert brute_force_count(5, 2) == 6          # C(6,1)
+    assert brute_force_count(10, 3) == 66        # C(12,2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 14), st.integers(2, 6), st.integers(0, 10_000))
+def test_hypothesis_scheduler_valid_and_bounded(L, H, seed):
+    """Property: any random profile yields a valid partition whose Eq. 8
+    value is no worse than ENP and no better than brute force."""
+    prof = random_profile(L, seed=seed,
+                          bandwidth=10 ** (8 + seed % 3))
+    dd = dreamddp_schedule(prof, H)
+    assert sum(dd.counts) == L and len(dd.counts) == H
+    assert all(c >= 0 for c in dd.counts)
+    enp = enp_schedule(prof, H)
+    assert dd.objective <= enp.objective + 1e-12
+    if L <= 10:
+        bf = brute_force_schedule(prof, H)
+        assert dd.objective >= bf.objective - 1e-12
+
+
+def test_degenerate_cases(profile12):
+    one = dreamddp_schedule(profile12, 1)
+    assert one.counts == (12,)
+    big = dreamddp_schedule(profile12, 20)      # H > L
+    assert sum(big.counts) == 12
+    with pytest.raises(ValueError):
+        dreamddp_schedule(profile12, 0)

@@ -1,0 +1,56 @@
+"""Sharding-rule unit tests (no devices needed beyond 1)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import RULES, leaf_spec
+
+
+class _FakeMesh:
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_basic_tp_mapping():
+    assert leaf_spec((None, "heads"), worker_axes=("data",)) \
+        == P("data", None, "model")
+    assert leaf_spec(("ff", None), worker_axes=()) == P(None, "model", None)
+
+
+def test_moe_dedup_expert_wins():
+    sp = leaf_spec(("layers", "expert", None, "ff"), worker_axes=())
+    assert sp == P(None, None, "model", None, None)
+
+
+def test_fsdp_places_data_on_first_free_dim():
+    sp = leaf_spec(("layers", None, "heads"), worker_axes=("pod",),
+                   fsdp=True)
+    assert sp == P("pod", None, "data", "model")
+
+
+def test_fsdp_skips_when_worker_uses_data():
+    sp = leaf_spec((None, "heads"), worker_axes=("pod", "data"), fsdp=True)
+    assert sp == P(("pod", "data"), None, "model")
+
+
+def test_divisibility_fallback():
+    # vocab 50280 % 16 != 0 -> replicated (shape has no worker lead here)
+    sp = leaf_spec(("vocab", None), worker_axes=(), with_lead=False,
+                   shape=(50280, 1536), mesh=_FakeMesh())
+    assert sp == P(None, None)
+    sp2 = leaf_spec(("vocab", None), worker_axes=(), with_lead=False,
+                    shape=(49152, 1536), mesh=_FakeMesh())
+    assert sp2 == P("model", None)
+    # worker-stacked variant: shape carries the lead dim
+    sp3 = leaf_spec(("vocab", None), worker_axes=("data",),
+                    shape=(16, 50280, 1536), mesh=_FakeMesh())
+    assert sp3 == P("data", None, None)
+
+
+def test_serving_no_lead():
+    sp = leaf_spec((None, "heads"), worker_axes=(), with_lead=False)
+    assert sp == P(None, "model")
+
+
+def test_rules_table_closed():
+    assert set(RULES) == {"vocab", "heads", "ff", "expert", "layers", None}

@@ -1,0 +1,54 @@
+"""System-level behaviour: outer optimizer, CLI drivers, serving path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.outer_opt import OuterConfig, outer_init, outer_sync_units
+from repro.core.partial_sync import UnitEntry, UnitLayout
+
+
+def test_outer_sync_moves_toward_worker_mean():
+    layout = UnitLayout((UnitEntry("u0", "g", None),))
+    w = 4
+    params = {"g": {"w": jnp.stack([jnp.full((3,), float(i))
+                                    for i in range(w)])}}
+    state = outer_init(params)
+    new_p, new_state = outer_sync_units(
+        params, state, [0], layout, OuterConfig(lr=1.0, beta=0.0,
+                                                nesterov=False))
+    # pseudo-grad = outer(0-init? no: outer starts at params) ...
+    # outer starts equal to the stacked params; with lr=1 the outer moves
+    # exactly onto the worker mean
+    mean = np.asarray(params["g"]["w"]).mean(0)
+    for i in range(w):
+        np.testing.assert_allclose(np.asarray(new_p["g"]["w"][i]), mean,
+                                   rtol=1e-6)
+    # all replicas reset to the same value (a synchronization point)
+    assert float(jnp.abs(new_p["g"]["w"] - new_p["g"]["w"][:1]).max()) == 0
+
+
+def test_outer_sync_untouched_units():
+    layout = UnitLayout((UnitEntry("u0", "a", None),
+                         UnitEntry("u1", "b", None)))
+    params = {"a": {"w": jnp.ones((2, 3))},
+              "b": {"w": jnp.arange(6.0).reshape(2, 3)}}
+    state = outer_init(params)
+    new_p, _ = outer_sync_units(params, state, [0], layout)
+    np.testing.assert_array_equal(np.asarray(new_p["b"]["w"]),
+                                  np.asarray(params["b"]["w"]))
+
+
+def test_train_cli_runs():
+    from repro.launch.train import main
+    rc = main(["--arch", "qwen3-1.7b", "--smoke", "--steps", "6",
+               "--workers", "2", "--batch-per-worker", "2", "--seq", "32",
+               "--period", "3"])
+    assert rc == 0
+
+
+def test_serve_cli_runs():
+    from repro.launch.serve import main
+    rc = main(["--arch", "granite-3-2b", "--smoke", "--batch", "2",
+               "--prompt-len", "8", "--gen", "4"])
+    assert rc == 0

@@ -1,0 +1,71 @@
+"""Eq. 7/8 time model: algebraic identities + baseline orderings."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.time_model import (Partition, flsgd_period_time, objective,
+                                   simulate_period, simulate_phase,
+                                   ssgd_iteration_time, wfbp_iteration_time)
+
+from conftest import random_profile
+
+
+def test_wfbp_no_slower_than_ssgd(profile12):
+    """Overlap can only help (paper §2, WFBP motivation)."""
+    assert wfbp_iteration_time(profile12) <= \
+        ssgd_iteration_time(profile12) + 1e-12
+
+
+def test_ascwfbp_no_slower_than_wfbp(profile12):
+    assert wfbp_iteration_time(profile12, n_channels=4) <= \
+        wfbp_iteration_time(profile12, n_channels=1) + 1e-12
+
+
+@pytest.mark.parametrize("H", [2, 5])
+def test_partial_sync_period_beats_flsgd(profile12, H):
+    """Eq. 7: overlapped partial sync <= full-sync LSGD per period."""
+    part = Partition.equal_number(len(profile12), H)
+    plsgd = sum(t.iteration_time for t in simulate_period(profile12, part)) \
+        + H * 0  # comm already included
+    assert plsgd <= flsgd_period_time(profile12, H) + 1e-9
+
+
+def test_simulate_phase_dependencies(profile12):
+    """Comm of layer l starts only after its BP completes and after the
+    previous comm finishes (the tau-recursion)."""
+    tl = simulate_phase(profile12, range(len(profile12)))
+    prev_done = 0.0
+    for i in sorted(tl.comm_start):
+        assert tl.comm_start[i] >= tl.bp_done[i] - 1e-12
+        assert tl.comm_start[i] >= prev_done - 1e-12
+        prev_done = tl.comm_done[i]
+
+
+def test_empty_phase_is_local_step(profile12):
+    tl = simulate_phase(profile12, [])
+    assert tl.iteration_time == pytest.approx(
+        profile12.t_fp_total + profile12.t_bp_total)
+    assert tl.exposed_comm == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 5), st.integers(0, 999))
+def test_objective_vs_exact_timeline(L, H, seed):
+    """Eq. 8 (sum-comm approximation) is a LOWER bound on the exact
+    event timeline only up to serialization effects; both must bound the
+    pure-compute floor from below."""
+    prof = random_profile(L, seed=seed)
+    part = Partition.equal_number(L, H)
+    floor = H * (prof.t_fp_total + prof.t_bp_total)
+    exact = sum(t.iteration_time for t in simulate_period(prof, part))
+    assert exact >= floor - 1e-12
+    assert objective(prof, part, include_fp=True) >= floor - 1e-12
+
+
+def test_partition_layer_ids_roundtrip():
+    p = Partition((2, 3, 1))
+    ids = p.layer_ids()
+    flat = sorted(i for ph in ids for i in ph)
+    assert flat == list(range(6))
+    # phase 0 holds the output-most layers (network ids 4, 5)
+    assert ids[0] == [4, 5]

@@ -1,0 +1,125 @@
+"""End-to-end training behaviour (paper's empirical claims, miniaturized).
+
+These are the system's acceptance tests: convergence of every algorithm,
+the divergence ordering of Fig. 5, fault tolerance, straggler requeue and
+elastic membership changes.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import HardwareSpec, analytic_profile, build_plan
+from repro.data import MarkovCorpus
+from repro.models.transformer import DecoderLM, LMConfig
+from repro.optim import make_optimizer
+from repro.runtime import (Runner, RunnerConfig, StepConfig,
+                           init_train_state)
+
+W = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = LMConfig(name="t", n_layers=4, d_model=48, n_heads=4,
+                   n_kv_heads=2, d_ff=96, vocab=64, param_dtype="float32",
+                   remat=False)
+    model = DecoderLM(cfg)
+    hw = HardwareSpec(bandwidth=1e9, n_workers=W)
+    prof = analytic_profile(model.layer_costs(4, 32), hw)
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=400)
+    data = MarkovCorpus(vocab=64, seq_len=32, batch_per_worker=4,
+                        n_workers=W, seed=0)
+    return model, prof, opt, data
+
+
+def _train(setup, algo, H, n=40, **kw):
+    model, prof, opt, data = setup
+    plan = build_plan(algo, prof, H)
+    scfg = StepConfig(track_divergence=True, **kw)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    r = Runner(model, opt, plan, data, step_cfg=scfg)
+    r.run(state, n)
+    return r
+
+
+@pytest.mark.parametrize("algo,H", [("ssgd", 1), ("flsgd", 4),
+                                    ("plsgd-enp", 4), ("dreamddp", 4)])
+def test_all_algorithms_converge(setup, algo, H):
+    r = _train(setup, algo, H)
+    losses = [h["loss"] for h in r.history]
+    assert losses[-1] < losses[0] - 0.3, algo
+
+
+def test_divergence_ordering(setup):
+    """Paper Fig. 5: ssgd ~ 0; partial sync < full sync."""
+    d_ssgd = max(h["divergence"] for h in _train(setup, "ssgd", 1).history)
+    d_full = max(h["divergence"] for h in _train(setup, "flsgd", 4).history)
+    d_part = max(h["divergence"]
+                 for h in _train(setup, "plsgd-enp", 4).history)
+    assert d_ssgd < 1e-8
+    assert d_part < d_full
+
+
+def test_compressed_and_outer_variants_converge(setup):
+    for kw in ({"compress": "int8_ef"}, {"outer": True}):
+        r = _train(setup, "dreamddp", 4, **kw)
+        losses = [h["loss"] for h in r.history]
+        assert losses[-1] < losses[0] - 0.3, kw
+
+
+def test_failure_recovery(setup, tmp_path):
+    model, prof, opt, data = setup
+    plan = build_plan("dreamddp", prof, 4)
+    scfg = StepConfig()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    ck = CheckpointManager(str(tmp_path))
+    r = Runner(model, opt, plan, data, ckpt=ck, step_cfg=scfg,
+               run_cfg=RunnerConfig(ckpt_every=8))
+    ck.save(0, state, block=True)
+    r.run(state, 20, inject_failure_at=11)
+    assert r.retries == 1
+    assert len(r.history) >= 20
+
+
+def test_straggler_requeues_sync(setup):
+    model, prof, opt, data = setup
+    plan = build_plan("dreamddp", prof, 4)
+    scfg = StepConfig()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    r = Runner(model, opt, plan, data, step_cfg=scfg,
+               run_cfg=RunnerConfig(deadline_factor=2.0, min_history=4))
+    # find a sync phase occurrence late enough to have timing history
+    sync_phase = next(h for h in range(plan.H)
+                      if plan.units_for_phase(h))
+    step_at = 12 + (sync_phase - 12) % plan.H
+    r.run(state, 24, inject_straggler_at=(step_at, 100.0))
+    assert r.skipped_syncs >= 1
+    # the makeup step ran at a later period boundary (pending cleared)
+    assert not r.pending_units
+
+
+def test_elastic_restore(setup, tmp_path):
+    model, prof, opt, data = setup
+    plan = build_plan("dreamddp", prof, 4)
+    scfg = StepConfig()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    ck = CheckpointManager(str(tmp_path))
+    r = Runner(model, opt, plan, data, ckpt=ck, step_cfg=scfg,
+               run_cfg=RunnerConfig(ckpt_every=8))
+    state = r.run(state, 8)
+    r.ckpt.wait()
+
+    plan4 = build_plan("dreamddp",
+                       prof.with_bandwidth(1e9, n_workers=4), 4)
+    tmpl = init_train_state(model, opt, jax.random.PRNGKey(0), 4, cfg=scfg)
+    step, state4 = r.restore_elastic(tmpl, 4, plan4)
+    assert jax.tree_util.tree_leaves(state4.params)[0].shape[0] == 4
+    r.data = MarkovCorpus(vocab=64, seq_len=32, batch_per_worker=4,
+                          n_workers=4, seed=0)
+    r.run(state4, 4, start_step=step)
