@@ -1,0 +1,12 @@
+.PHONY: test test-fast bench
+
+# Tier-1 suite (ROADMAP.md verify command)
+test:
+	./scripts/ci.sh
+
+# Skip the slow end-to-end training tests
+test-fast:
+	PYTHONPATH=src python -m pytest -x -q --ignore=tests/test_train_integration.py
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run --fast

@@ -9,13 +9,8 @@ with the Table-1 per-iteration times to produce wall-clock-to-target
 
 from __future__ import annotations
 
-import jax
-
-from repro.core import HardwareSpec, analytic_profile, build_plan
-from repro.data import MarkovCorpus
+from repro.api import JobConfig, Session
 from repro.models.transformer import DecoderLM, LMConfig
-from repro.optim import make_optimizer
-from repro.runtime import Runner, StepConfig, init_train_state
 
 from .bench_iteration_time import iteration_times
 
@@ -26,19 +21,13 @@ _CFG = LMConfig(name="bench", n_layers=4, d_model=48, n_heads=4,
 
 def train_once(algo: str, H: int, *, workers: int = 8, steps: int = 60,
                seed: int = 0, track: bool = True):
-    model = DecoderLM(_CFG)
-    hw = HardwareSpec(bandwidth=1e9, n_workers=workers)
-    prof = analytic_profile(model.layer_costs(4, 32), hw)
-    plan = build_plan(algo, prof, H)
-    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=600)
-    scfg = StepConfig(track_divergence=track)
-    state = init_train_state(model, opt, jax.random.PRNGKey(seed), workers,
-                             cfg=scfg)
-    data = MarkovCorpus(vocab=64, seq_len=32, batch_per_worker=4,
-                        n_workers=workers, seed=seed)
-    r = Runner(model, opt, plan, data, step_cfg=scfg)
-    r.run(state, steps)
-    return r.history
+    sess = Session(
+        JobConfig(algo=algo, workers=workers, period=H, bandwidth=1e9,
+                  seq=32, batch_per_worker=4, lr=3e-3, warmup_steps=5,
+                  decay_steps=600, track_divergence=track, seed=seed),
+        model=DecoderLM(_CFG))
+    sess.fit(steps)
+    return sess.history
 
 
 def run_divergence(csv: bool = True, steps: int = 48) -> dict:

@@ -36,8 +36,18 @@ def main(argv=None) -> int:
     t0 = time.time()
     failures = []
 
+    from repro.api import available_strategies
+
     from . import (bench_iteration_time, bench_kernels, bench_scheduling,
                    bench_search_complexity)
+
+    _section("Strategy registry")
+    names = available_strategies()
+    print("registered:", ", ".join(names))
+    missing = [a for a in ("ssgd", "wfbp", "ascwfbp", "flsgd", "plsgd-enp",
+                           "dreamddp") if a not in names]
+    if missing:
+        failures.append(("registry", missing))
 
     _section("Table 1: iteration time (s) per algorithm")
     rows = bench_iteration_time.run()

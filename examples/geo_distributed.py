@@ -5,28 +5,30 @@ full granite-3-2b config and shows the Algorithm-2 partition, the phase
 timelines, and DreamDDP's speedup over S-SGD / ASC-WFBP / FLSGD at each
 point (the paper's Figs 1-2 + Table 1 story).
 
+The sweep is one :class:`repro.api.Session` and five ``replan()`` calls —
+bandwidth drift is first-class: each call cheaply re-derives the comm
+profile and re-solves the partition (the schedule is data, not code).
+
     PYTHONPATH=src python examples/geo_distributed.py
 """
 
-from repro.configs import get_arch
-from repro.core import (HardwareSpec, analytic_profile, ascwfbp_iteration_time,
-                        build_plan, flsgd_period_time, simulate_period,
-                        ssgd_iteration_time)
+from repro.api import JobConfig, Session
+from repro.core import (ascwfbp_iteration_time, flsgd_period_time,
+                        simulate_period, ssgd_iteration_time)
 from repro.core.time_model import Partition
 
 H, W = 5, 32
-arch = get_arch("granite-3-2b")
-model = arch.make_model()
-costs = model.layer_costs(batch=8, seq=4096)
+sess = Session(JobConfig(arch="granite-3-2b", algo="dreamddp", smoke=False,
+                         workers=W, period=H, batch_per_worker=8, seq=4096,
+                         bandwidth=1e7, latency=1e-3,
+                         chips_per_worker=256))   # one worker = one pod
 
 print(f"{'bandwidth':>12} {'ratio':>7} {'partition':>22} "
       f"{'dream ms':>9} {'ssgd ms':>9} {'ascwfbp':>9} {'flsgd':>9} "
       f"{'S1':>6} {'S2':>6}")
 for bw in (1e7, 1e8, 1e9, 5e9, 2e10):
-    hw = HardwareSpec(bandwidth=bw, n_workers=W, latency=1e-3,
-                      chips_per_worker=256)   # one worker = one pod
-    prof = analytic_profile(costs, hw)
-    plan = build_plan("dreamddp", prof, H)
+    plan = sess.replan(bandwidth=bw)
+    prof = sess.profile()
     part = Partition(tuple(plan.meta["partition_counts"]))
     n = plan.n_units
     fills = [[n - 1 - u for u in f] for f in plan.fill_units]

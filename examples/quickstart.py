@@ -1,33 +1,56 @@
-"""Quickstart: profile -> Algorithm 2 schedule -> bubble fill -> train.
+"""Quickstart: the ``repro.api.Session`` facade, end to end.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One object runs the whole DreamDDP pipeline — profile the layers,
+search the partition (Algorithm 2), fill bubbles (§3.4), compile one
+executable per phase, and train::
+
+    sess = Session(JobConfig(arch="granite-3-2b", algo="dreamddp",
+                             workers=8, period=5, bandwidth=1e9))
+    sess.fit(40)
+
+``algo`` names a pluggable :class:`repro.api.SyncStrategy` — the paper's
+algorithms (ssgd/wfbp/ascwfbp/flsgd/plsgd-enp/dreamddp) and beyond-paper
+compositions (dreamddp-int8, hier-2tier) ship registered; add your own::
+
+    from repro.api import SyncStrategy, register_strategy
+
+    @register_strategy("sync-everything")
+    class SyncEverything(SyncStrategy):
+        def build_plan(self, profile, H, *, fill_mode="exact"):
+            n = len(profile)
+            return SyncPlan(algo=self.name, comm="parameters", H=1,
+                            n_units=n, phase_units=(tuple(range(n)),))
+
+A strategy owns its plan construction, its communication mode (gradients
+vs. parameters) and its sync hook (plain mean / int8+EF / outer
+optimizer), so nothing else in the codebase needs to know its name.
 """
 
-import jax
-
-from repro.configs import get_arch
-from repro.core import (HardwareSpec, analytic_profile, build_plan,
-                        simulate_period)
+from repro.api import JobConfig, Session, available_strategies
+from repro.core import simulate_period
 from repro.core.time_model import Partition
-from repro.data import MarkovCorpus
-from repro.optim import make_optimizer
-from repro.runtime import Runner, StepConfig, init_train_state
 
 W, H, STEPS = 8, 5, 40
 
+sess = Session(JobConfig(arch="granite-3-2b", algo="dreamddp", workers=W,
+                         period=H, bandwidth=1e9, batch_per_worker=4,
+                         seq=64, lr=3e-3, warmup_steps=5, decay_steps=400,
+                         track_divergence=True))
+print(f"registered strategies: {', '.join(available_strategies())}")
+
 # 1. a model (reduced granite config so it actually trains on CPU)
-arch = get_arch("granite-3-2b")
-model = arch.make_smoke()
+model = sess.model
 print(f"model: {model.cfg.name}, {model.param_count() / 1e6:.2f}M params, "
       f"{len(model.unit_layout())} schedulable units")
 
-# 2. profile the layers for a 1 GB/s geo link
-hw = HardwareSpec(bandwidth=1e9, n_workers=W)
-profile = analytic_profile(model.layer_costs(batch=4, seq=64), hw)
+# 2. the layer profile for a 1 GB/s geo link
+profile = sess.profile()
 print(f"comm/compute ratio: {profile.comm_compute_ratio():.2f}")
 
-# 3. search the partition (Algorithm 2) + fill bubbles (§3.4)
-plan = build_plan("dreamddp", profile, H)
+# 3. the strategy's schedule (Algorithm 2 + §3.4 bubble fill)
+plan = sess.plan
 print(f"partition (BP-order counts): {plan.meta['partition_counts']}")
 print(f"supplementary syncs/period:  {plan.meta['extra_syncs']}")
 for h in range(H):
@@ -40,13 +63,7 @@ print(f"predicted iteration time: {t * 1e3:.1f} ms "
       f"(vs S-SGD {1e3 * (profile.t_fp_total + profile.t_bp_total + profile.t_comm_total):.1f} ms)")
 
 # 5. train for real
-opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=400)
-cfg = StepConfig(track_divergence=True)
-state = init_train_state(model, opt, jax.random.PRNGKey(0), W, cfg=cfg)
-data = MarkovCorpus(vocab=model.cfg.vocab, seq_len=64, batch_per_worker=4,
-                    n_workers=W)
-runner = Runner(model, opt, plan, data, step_cfg=cfg)
-state = runner.run(state, STEPS)
-h0, h1 = runner.history[0], runner.history[-1]
+sess.fit(STEPS)
+h0, h1 = sess.history[0], sess.history[-1]
 print(f"loss {h0['loss']:.3f} -> {h1['loss']:.3f}; "
       f"divergence {h1['divergence']:.2e}")

@@ -1,23 +1,19 @@
 """End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
 
 A scaled-down granite-family config (~100M params) on the synthetic
-Markov corpus with the full DreamDDP pipeline + checkpointing.  On this
-CPU container a step takes a few seconds; pass --steps to shorten.
+Markov corpus, driven through the :class:`repro.api.Session` facade with
+an explicit model override (the ``model=`` keyword replaces the arch
+registry lookup).  On this CPU container a step takes a few seconds;
+pass --steps to shorten.
 
     PYTHONPATH=src python examples/train_100m.py --steps 300
 """
 
 import argparse
 
-import jax
-
+from repro.api import JobConfig, Session
 from repro.checkpoint import CheckpointManager
-from repro.core import HardwareSpec, analytic_profile, build_plan
-from repro.data import MarkovCorpus
 from repro.models.transformer import DecoderLM, LMConfig
-from repro.optim import make_optimizer
-from repro.runtime import Runner, RunnerConfig, StepConfig, \
-    init_train_state
 
 CFG_100M = LMConfig(
     name="granite-100m", n_layers=10, d_model=640, n_heads=10,
@@ -37,30 +33,27 @@ def main():
 
     model = DecoderLM(CFG_100M)
     print(f"params: {model.param_count() / 1e6:.1f}M")
-    hw = HardwareSpec(bandwidth=1e9, n_workers=args.workers)
-    prof = analytic_profile(
-        model.layer_costs(args.batch_per_worker, args.seq), hw)
-    plan = build_plan("dreamddp", prof, args.period)
+
+    sess = Session(
+        JobConfig(algo="dreamddp", workers=args.workers,
+                  period=args.period, bandwidth=1e9, seq=args.seq,
+                  batch_per_worker=args.batch_per_worker,
+                  optimizer="adamw", lr=1e-3, warmup_steps=20,
+                  decay_steps=args.steps, weight_decay=0.01,
+                  ckpt_every=100),
+        model=model,
+        ckpt=CheckpointManager(args.ckpt_dir, keep=2))
+    plan = sess.plan
     print("plan:", plan.meta["partition_counts"],
           "fills:", plan.meta["extra_syncs"])
 
-    opt = make_optimizer("adamw", lr=1e-3, warmup_steps=20,
-                         decay_steps=args.steps, weight_decay=0.01)
-    cfg = StepConfig()
-    state = init_train_state(model, opt, jax.random.PRNGKey(0),
-                             args.workers, cfg=cfg)
-    data = MarkovCorpus(vocab=CFG_100M.vocab, seq_len=args.seq,
-                        batch_per_worker=args.batch_per_worker,
-                        n_workers=args.workers)
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-    runner = Runner(model, opt, plan, data, ckpt=ckpt, step_cfg=cfg,
-                    run_cfg=RunnerConfig(ckpt_every=100, log_every=10))
-    state = runner.run(state, args.steps)
-    losses = [h["loss"] for h in runner.history]
-    med = sorted(h["time"] for h in runner.history)[len(losses) // 2]
+    sess.fit(args.steps)
+    losses = [h["loss"] for h in sess.history]
+    med = sorted(h["time"] for h in sess.history)[len(losses) // 2]
+    data = sess.runner.data
     print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
           f"(floor ~{data.entropy_floor():.3f}); {med * 1e3:.0f} ms/step; "
-          f"last ckpt step {ckpt.latest_step()}")
+          f"last ckpt step {sess.runner.ckpt.latest_step()}")
 
 
 if __name__ == "__main__":

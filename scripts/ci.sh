@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification (matches ROADMAP.md): the full pytest suite from the
+# repo root with the src layout on the path.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,3 +1,3 @@
 """DreamDDP on JAX/TPU: layer-wise scheduled partial synchronization."""
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

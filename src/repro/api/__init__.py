@@ -1,0 +1,41 @@
+"""repro.api — the declarative front door to the DreamDDP reproduction.
+
+Two ideas:
+
+* the synchronization algorithm is a **pluggable strategy**
+  (:class:`SyncStrategy` + :func:`register_strategy`), not a string
+  special-cased across the codebase;
+* a training job is **data** (:class:`JobConfig`), and :class:`Session`
+  turns it into a running system — ``.fit(n)``, ``.profile()``, ``.plan``,
+  ``.replan(bandwidth=..., workers=...)``, ``.serve()``.
+
+Quick start::
+
+    from repro.api import JobConfig, Session
+    Session(JobConfig(arch="granite-3-2b", algo="dreamddp",
+                      workers=8, period=5)).fit(100)
+
+Custom strategy::
+
+    from repro.api import SyncStrategy, register_strategy
+
+    @register_strategy("my-algo")
+    class MyAlgo(SyncStrategy):
+        def build_plan(self, profile, H, *, fill_mode="exact"):
+            ...  # return a repro.core.plans.SyncPlan
+"""
+
+from ..core.sync_policies import (Int8EFSync, MeanSync, OuterOptSync,
+                                  SyncPolicy, resolve_policy)
+from .registry import (available_strategies, get_strategy,
+                       register_strategy, unregister_strategy)
+from .session import InferenceSession, JobConfig, Session
+from .strategies import SyncStrategy
+
+__all__ = [
+    "JobConfig", "Session", "InferenceSession",
+    "SyncStrategy", "register_strategy", "get_strategy",
+    "unregister_strategy", "available_strategies",
+    "SyncPolicy", "MeanSync", "Int8EFSync", "OuterOptSync",
+    "resolve_policy",
+]

@@ -1,0 +1,306 @@
+"""Declarative Session facade: one object from job spec to trained model.
+
+Replaces the 8-step manual wire-up (arch -> model -> HardwareSpec ->
+profile -> plan -> optimizer -> state -> Runner) that every driver used to
+duplicate::
+
+    from repro.api import JobConfig, Session
+
+    sess = Session(JobConfig(arch="granite-3-2b", algo="dreamddp",
+                             workers=8, period=5, bandwidth=1e9))
+    sess.fit(100)                      # profile -> plan -> train
+    sess.replan(bandwidth=1e8)         # link drifted: re-solve + hot-swap
+    sess.fit(100)                      # continue on the new schedule
+    handle = sess.serve()              # inference on the trained replica
+
+Everything is lazy: ``.plan`` / ``.profile()`` work without ever building
+training state (analysis-only usage), and ``.fit`` builds the runner on
+first call.  ``.replan(bandwidth=..., workers=..., period=..., algo=...)``
+makes elasticity and bandwidth drift first-class: it re-solves the
+schedule, reshards the worker axis if the membership changed, and rebuilds
+the phase-specialized steps mid-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager
+from ..core.partial_sync import worker_unstack
+from ..core.plans import SyncPlan
+from ..core.profiler import HardwareSpec, LayerProfile, analytic_profile
+from ..data import MarkovCorpus
+from ..optim import make_optimizer
+from ..runtime import (Runner, RunnerConfig, StepConfig, TrainState,
+                       init_train_state)
+from ..runtime.runner import reshard_train_state
+from ..runtime.step import make_decode_step, make_prefill_step
+from .registry import get_strategy
+
+__all__ = ["JobConfig", "Session", "InferenceSession"]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class JobConfig:
+    """Declarative description of one training job (pure data)."""
+
+    arch: str = "granite-3-2b"
+    algo: str = "dreamddp"
+    workers: int = 8
+    period: int = 5                    # H, iterations per sync period
+    bandwidth: float = 1e9             # bytes/s on the sync (slow/geo) axis
+    latency: float = 5e-4
+    chips_per_worker: int = 1
+    batch_per_worker: int = 4
+    seq: int = 64
+    smoke: bool = True                 # reduced same-family config
+    optimizer: str = "adam"
+    lr: float = 3e-3
+    warmup_steps: int = 10
+    decay_steps: int = 400
+    weight_decay: float = 0.0
+    n_microbatches: int = 1
+    compress: str | None = None        # None | "int8_ef" (legacy flag)
+    outer: bool = False                # DiLoCo outer optimizer (legacy flag)
+    track_divergence: bool = False
+    fill_mode: str = "exact"
+    seed: int = 0
+    ckpt_dir: str | None = None
+    ckpt_every: int = 200
+
+    def replace(self, **kw) -> "JobConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class Session:
+    """Facade over profile -> schedule -> phase steps -> runner -> serving.
+
+    ``model`` / ``data`` / ``ckpt`` keyword overrides replace the pieces
+    the config would otherwise build (e.g. a custom model with
+    ``layer_costs``/``unit_layout``/``loss``, or a real data pipeline).
+    """
+
+    def __init__(self, cfg: JobConfig, *, model: Any = None,
+                 data: Any = None, ckpt: CheckpointManager | None = None):
+        self.cfg = cfg
+        self.strategy = get_strategy(cfg.algo)
+        self._model = model
+        self._frontend: str | None = None
+        self._data = data
+        self._owns_data = data is None
+        self._ckpt = ckpt
+        self._profile: LayerProfile | None = None
+        self._plan: SyncPlan | None = None
+        self._opt = None
+        self._runner: Runner | None = None
+        self._state: TrainState | None = None
+        self._step = 0
+
+    # ------------------------------------------------------------ lazy parts
+    @property
+    def model(self):
+        if self._model is None:
+            from ..configs import get_arch
+            arch = get_arch(self.cfg.arch)
+            self._model = (arch.make_smoke() if self.cfg.smoke
+                           else arch.make_model())
+            self._frontend = arch.frontend
+        return self._model
+
+    @property
+    def hardware(self) -> HardwareSpec:
+        return HardwareSpec(bandwidth=self.cfg.bandwidth,
+                            latency=self.cfg.latency,
+                            n_workers=self.cfg.workers,
+                            chips_per_worker=self.cfg.chips_per_worker)
+
+    def profile(self, *, refresh: bool = False) -> LayerProfile:
+        """The layer-wise comm/compute profile the scheduler consumes."""
+        if self._profile is None or refresh:
+            costs = self.model.layer_costs(self.cfg.batch_per_worker,
+                                           self.cfg.seq)
+            self._profile = analytic_profile(costs, self.hardware)
+        return self._profile
+
+    @property
+    def plan(self) -> SyncPlan:
+        """The strategy's SyncPlan (built on first access)."""
+        if self._plan is None:
+            self._plan = self.strategy.build_plan(
+                self.profile(), self.cfg.period,
+                fill_mode=self.cfg.fill_mode)
+        return self._plan
+
+    @property
+    def step_config(self) -> StepConfig:
+        base = StepConfig(n_microbatches=self.cfg.n_microbatches,
+                          compress=self.cfg.compress, outer=self.cfg.outer,
+                          track_divergence=self.cfg.track_divergence)
+        return dataclasses.replace(
+            base, policy=self.strategy.sync_policy(base))
+
+    @property
+    def state(self) -> TrainState:
+        self._ensure_built()
+        return self._state
+
+    @property
+    def history(self) -> list[dict]:
+        return self._runner.history if self._runner is not None else []
+
+    @property
+    def runner(self) -> Runner:
+        self._ensure_built()
+        return self._runner
+
+    # -------------------------------------------------------------- training
+    def _make_data(self):
+        return MarkovCorpus(vocab=self.model.cfg.vocab,
+                            seq_len=self.cfg.seq,
+                            batch_per_worker=self.cfg.batch_per_worker,
+                            n_workers=self.cfg.workers, seed=self.cfg.seed)
+
+    def _ensure_built(self) -> None:
+        if self._runner is not None:
+            return
+        cfg = self.cfg
+        scfg = self.step_config
+        opt_kw = dict(lr=cfg.lr, warmup_steps=cfg.warmup_steps,
+                      decay_steps=cfg.decay_steps)
+        if cfg.weight_decay:
+            opt_kw["weight_decay"] = cfg.weight_decay
+        self._opt = make_optimizer(cfg.optimizer, **opt_kw)
+        if self._data is None:
+            self._data = self._make_data()
+        if self._ckpt is None and cfg.ckpt_dir:
+            self._ckpt = CheckpointManager(cfg.ckpt_dir)
+        self._state = init_train_state(self.model, self._opt,
+                                       jax.random.PRNGKey(cfg.seed),
+                                       cfg.workers, cfg=scfg)
+        self._runner = Runner(self.model, self._opt, self.plan, self._data,
+                              ckpt=self._ckpt, step_cfg=scfg,
+                              run_cfg=RunnerConfig(
+                                  ckpt_every=cfg.ckpt_every))
+
+    def fit(self, steps: int) -> "Session":
+        """Train for ``steps`` iterations (resumable; history accumulates)."""
+        self._ensure_built()
+        self._state = self._runner.run(self._state, steps,
+                                       start_step=self._step)
+        self._step += steps
+        return self
+
+    # ------------------------------------------------------------- replan
+    def replan(self, *, bandwidth: float | None = None,
+               latency: float | None = None, workers: int | None = None,
+               period: int | None = None, algo: str | None = None,
+               fill_mode: str | None = None, data: Any = None) -> SyncPlan:
+        """Re-solve the schedule for a changed link/membership/algorithm.
+
+        The schedule is data: a bandwidth drift or an elastic membership
+        change only requires a cheap re-profile and a new partition search.
+        If training state exists, the worker axis is resharded (replicas
+        averaged and re-broadcast — a synchronization point, so Lemma 4
+        survives) and the phase-specialized steps are rebuilt in place.
+
+        A session built with a custom ``data=`` override must supply a
+        replacement via ``data=`` here when ``workers`` changes — batch
+        shapes carry the worker axis, so keeping the old source would
+        feed mis-shaped batches into the resharded steps.
+        """
+        updates: dict[str, Any] = {}
+        for key, val in (("bandwidth", bandwidth), ("latency", latency),
+                         ("workers", workers), ("period", period),
+                         ("algo", algo), ("fill_mode", fill_mode)):
+            if val is not None:
+                updates[key] = val
+        old_workers = self.cfg.workers
+        old_strategy = self.strategy
+        workers_changed = workers is not None and workers != old_workers
+        # validate before mutating any session state, so a failed replan
+        # leaves the session consistent
+        new_strategy = get_strategy(algo) if algo is not None \
+            else self.strategy
+        if workers_changed and data is None and not self._owns_data and \
+                self._data is not None:
+            raise ValueError(
+                "replan(workers=...) on a session with a custom data "
+                "source: pass a replacement via replan(..., data=...) "
+                "matching the new worker count")
+        self.cfg = self.cfg.replace(**updates)
+        self.strategy = new_strategy
+
+        # cheap re-profile (paper §6): comm times re-derived for the link
+        self._profile = self.profile().with_bandwidth(
+            self.cfg.bandwidth, self.cfg.latency, self.cfg.workers)
+        self._plan = self.strategy.build_plan(
+            self._profile, self.cfg.period, fill_mode=self.cfg.fill_mode)
+
+        if data is not None:
+            self._data = data
+            self._owns_data = False
+            if self._runner is not None:
+                self._runner.data = data
+
+        if self._runner is not None:
+            scfg = self.step_config
+            if workers_changed:
+                self._state = reshard_train_state(self._state,
+                                                  self.cfg.workers)
+                if self._owns_data:
+                    self._data = self._make_data()
+                    self._runner.data = self._data
+            if algo is not None and type(self.strategy) is not \
+                    type(old_strategy):
+                # the sync policy may differ; re-derive its aux state
+                policy = scfg.policy
+                ef, outer = policy.init_state(self._state.params)
+                self._state = self._state._replace(ef=ef, outer=outer)
+            self._runner.step_cfg = scfg
+            self._runner.replan(self._plan)
+        return self._plan
+
+    # ------------------------------------------------------------- serving
+    def serve(self, *, worker: int = 0) -> "InferenceSession":
+        """The inference path: one synchronized replica, jitted steps."""
+        model = self.model
+        if self._state is not None:
+            params = worker_unstack(self._state.params, worker)
+        else:
+            params = model.init(jax.random.PRNGKey(self.cfg.seed))
+        prefill = jax.jit(make_prefill_step(model,
+                                            with_frontend=self._frontend))
+        decode = jax.jit(make_decode_step(model))
+        return InferenceSession(model, params, prefill, decode)
+
+
+class InferenceSession:
+    """Greedy batched decoding over a single (synchronized) replica."""
+
+    def __init__(self, model, params, prefill, decode):
+        self.model = model
+        self.params = params
+        self._prefill = prefill
+        self._decode = decode
+
+    def generate(self, tokens: jax.Array, max_new_tokens: int = 16,
+                 *extra) -> jax.Array:
+        """Prefill ``tokens`` ``[B, S]`` then decode greedily."""
+        b, s = tokens.shape
+        if max_new_tokens <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
+        cache = self.model.init_cache(b, s + max_new_tokens)
+        logits, cache = self._prefill(self.params, tokens, cache, *extra)
+        out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+        for i in range(max_new_tokens - 1):
+            pos = jnp.full((b,), s + i, jnp.int32)
+            logits, cache = self._decode(self.params, cache, out[-1], pos)
+            out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        return jnp.concatenate(out, axis=1)

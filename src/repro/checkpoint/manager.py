@@ -59,6 +59,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------ save
@@ -69,19 +70,27 @@ class CheckpointManager:
         treedef = jax.tree_util.tree_structure(state)
 
         def work():
-            self._write(step, host, treedef, meta or {})
-            self._gc()
+            try:
+                self._write(step, host, treedef, meta or {})
+                self._gc()
+            except BaseException as e:    # surfaced by the next wait()
+                self._error = e
 
         if self.async_save and not block:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
             work()
+            self.wait()                   # re-raise a sync-save failure
 
     def wait(self) -> None:
+        """Block until any in-flight save lands; re-raise its failure."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _write(self, step: int, host: PyTree, treedef, meta: dict) -> None:
         name = f"step_{step:08d}"
@@ -116,6 +125,7 @@ class CheckpointManager:
 
     # --------------------------------------------------------------- restore
     def latest_step(self) -> int | None:
+        self.wait()                       # pending async saves count
         ptr = os.path.join(self.dir, "LATEST")
         if not os.path.exists(ptr):
             return None
@@ -125,7 +135,11 @@ class CheckpointManager:
     def restore(self, template: PyTree, *, step: int | None = None
                 ) -> tuple[int, PyTree, dict]:
         """Load into ``template``'s structure (shapes may differ in the
-        worker axis — caller reshards via :func:`reshard_workers`)."""
+        worker axis — caller reshards via :func:`reshard_workers`).
+
+        Waits for any in-flight async save first, so a restore issued right
+        after a save never races the background writer."""
+        self.wait()
         if step is None:
             step = self.latest_step()
         if step is None:

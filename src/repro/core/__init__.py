@@ -13,7 +13,10 @@ from .outer_opt import OuterConfig, OuterState, outer_init, outer_sync_units
 from .partial_sync import (UnitEntry, UnitLayout, contiguous_ranges,
                            divergence, sync_units, tree_worker_mean,
                            unit_divergence, worker_stack, worker_unstack)
-from .plans import ALGOS, SyncPlan, build_plan
+from .plans import (ALGOS, SyncPlan, build_plan, local_plan,
+                    plan_from_partition)
+from .sync_policies import (Int8EFSync, MeanSync, OuterOptSync, SyncPolicy,
+                            resolve_policy)
 from .profiler import (A6000_CLUSTER, GEO_WAN, V5E, HardwareSpec, LayerCost,
                        LayerProfile, analytic_profile, measured_profile,
                        ring_allreduce_time)

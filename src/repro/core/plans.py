@@ -2,18 +2,20 @@
 
 A :class:`SyncPlan` is pure data: for each phase ``h`` in a period of ``H``
 iterations, the set of layer-unit ids (network order) whose parameters are
-averaged across workers in that phase.  It is produced once by the scheduler
-(:mod:`repro.core.schedule` + :mod:`repro.core.bubble_fill`) from a profile,
+averaged across workers in that phase.  It is produced once by a registered
+:class:`~repro.api.SyncStrategy` (see :mod:`repro.api`) from a profile,
 serialized alongside checkpoints, and re-solved whenever bandwidth or the
 worker count changes (elasticity: the schedule is data, not code).
 
-``algo`` distinguishes what is communicated:
+``comm`` distinguishes what is communicated — ``"gradients"`` (classic DDP:
+worker-averaged gradients before the optimizer, every iteration) or
+``"parameters"`` (local update first, then the phase's units are
+parameter-averaged, Eq. 5).  It is set by the strategy that built the plan;
+for plans deserialized from older artifacts it is derived from the legacy
+algorithm name.
 
-* ``"ssgd"`` / ``"wfbp"`` / ``"ascwfbp"`` — gradients, every iteration
-  (H == 1, all units in phase 0);
-* ``"flsgd"`` — parameters, all units in the last phase of the period;
-* ``"plsgd-enp"`` / ``"dreamddp"`` — parameters, per the partition
-  (+ bubble fills for dreamddp).
+:func:`build_plan` remains as a thin shim over the strategy registry so
+existing ``build_plan("dreamddp", ...)`` call sites keep working.
 """
 
 from __future__ import annotations
@@ -22,16 +24,24 @@ import hashlib
 import json
 from dataclasses import dataclass, field
 
-from .bubble_fill import FillResult, fill_bubbles
+from .bubble_fill import FillResult
 from .profiler import LayerProfile
-from .schedule import (ScheduleResult, brute_force_schedule,
-                       dreamddp_schedule, enp_schedule)
-from .time_model import Partition
+from .schedule import ScheduleResult
 
-__all__ = ["SyncPlan", "build_plan", "ALGOS"]
+__all__ = ["SyncPlan", "build_plan", "plan_from_partition", "local_plan",
+           "ALGOS", "GRADIENTS", "PARAMETERS"]
 
+#: The seed algorithm names (kept for backward compatibility; the strategy
+#: registry in :mod:`repro.api` is the source of truth and hosts more).
 ALGOS = ("ssgd", "wfbp", "ascwfbp", "flsgd", "plsgd-enp", "dreamddp",
          "dreamddp-bf")
+
+GRADIENTS = "gradients"
+PARAMETERS = "parameters"
+
+# Legacy algo-name -> comm mode, used only when deserializing plans written
+# before ``comm`` existed (or constructed without it).
+_LEGACY_GRADIENT_ALGOS = ("ssgd", "wfbp", "ascwfbp")
 
 
 @dataclass(frozen=True)
@@ -43,6 +53,8 @@ class SyncPlan:
     n_units: int
     # per phase: sorted tuple of unit ids (network order) to synchronize
     phase_units: tuple[tuple[int, ...], ...]
+    # "gradients" | "parameters"; derived from legacy algo names when empty
+    comm: str = ""
     # per phase: the subset of phase_units that are §3.4 bubble fills
     fill_units: tuple[tuple[int, ...], ...] = ()
     unit_names: tuple[str, ...] = ()
@@ -50,6 +62,14 @@ class SyncPlan:
     meta: dict = field(default_factory=dict, compare=False, hash=False)
 
     def __post_init__(self):
+        if not self.comm:
+            object.__setattr__(
+                self, "comm",
+                GRADIENTS if self.algo in _LEGACY_GRADIENT_ALGOS
+                else PARAMETERS)
+        if self.comm not in (GRADIENTS, PARAMETERS):
+            raise ValueError(f"comm must be {GRADIENTS!r} or {PARAMETERS!r},"
+                             f" got {self.comm!r}")
         if len(self.phase_units) != self.H:
             raise ValueError(
                 f"{len(self.phase_units)} phases for H={self.H}")
@@ -57,7 +77,7 @@ class SyncPlan:
         for units in self.phase_units:
             seen.update(units)
         missing = set(range(self.n_units)) - seen
-        if missing and self.algo not in ("ssgd", "wfbp", "ascwfbp"):
+        if missing and self.comm == PARAMETERS:
             raise ValueError(
                 f"plan never synchronizes units {sorted(missing)}; every "
                 f"layer must sync at least once per period (Lemma 4)")
@@ -79,12 +99,13 @@ class SyncPlan:
 
     @property
     def is_parameter_sync(self) -> bool:
-        return self.algo in ("flsgd", "plsgd-enp", "dreamddp", "dreamddp-bf")
+        return self.comm == PARAMETERS
 
     # -- (de)serialization ----------------------------------------------------
     def to_json(self) -> str:
         return json.dumps({
-            "algo": self.algo, "H": self.H, "n_units": self.n_units,
+            "algo": self.algo, "comm": self.comm, "H": self.H,
+            "n_units": self.n_units,
             "phase_units": [list(u) for u in self.phase_units],
             "fill_units": [list(u) for u in self.fill_units],
             "unit_names": list(self.unit_names),
@@ -96,7 +117,8 @@ class SyncPlan:
     def from_json(s: str) -> "SyncPlan":
         o = json.loads(s)
         return SyncPlan(
-            algo=o["algo"], H=o["H"], n_units=o["n_units"],
+            algo=o["algo"], comm=o.get("comm", ""), H=o["H"],
+            n_units=o["n_units"],
             phase_units=tuple(tuple(u) for u in o["phase_units"]),
             fill_units=tuple(tuple(u) for u in o.get("fill_units", [])),
             unit_names=tuple(o.get("unit_names", ())),
@@ -112,9 +134,15 @@ def _bp_positions_to_units(positions, n_units: int) -> tuple[int, ...]:
     return tuple(sorted(n_units - 1 - p for p in positions))
 
 
-def _plan_from_partition(algo: str, profile: LayerProfile, H: int,
-                         result: ScheduleResult,
-                         fills: FillResult | None) -> SyncPlan:
+def plan_from_partition(algo: str, profile: LayerProfile, H: int,
+                        result: ScheduleResult,
+                        fills: FillResult | None, *,
+                        comm: str = PARAMETERS) -> SyncPlan:
+    """Materialize a :class:`SyncPlan` from an Algorithm-2 search result.
+
+    Shared by every partition-based strategy (plsgd-enp, dreamddp and its
+    registry-provided derivatives).
+    """
     n = len(profile)
     intervals = result.partition.bp_intervals()
     phase_units, fill_units = [], []
@@ -124,7 +152,7 @@ def _plan_from_partition(algo: str, profile: LayerProfile, H: int,
         phase_units.append(_bp_positions_to_units(base | extra, n))
         fill_units.append(_bp_positions_to_units(extra - base, n))
     return SyncPlan(
-        algo=algo, H=H, n_units=n,
+        algo=algo, comm=comm, H=H, n_units=n,
         phase_units=tuple(phase_units), fill_units=tuple(fill_units),
         unit_names=tuple(c.name for c in profile.layers),
         objective=result.objective,
@@ -139,29 +167,29 @@ def _plan_from_partition(algo: str, profile: LayerProfile, H: int,
     )
 
 
+def local_plan(n_units: int) -> SyncPlan:
+    """A plan whose phase 0 performs **no** synchronization at all.
+
+    Used by the runner for straggler-skipped phases (a pure local step) —
+    phase 1 nominally syncs everything so the every-unit-per-period
+    invariant holds, but only phase 0 is ever executed.
+    """
+    return SyncPlan(algo="local", comm=PARAMETERS, H=2, n_units=n_units,
+                    phase_units=((), tuple(range(n_units))),
+                    fill_units=((), ()))
+
+
 def build_plan(algo: str, profile: LayerProfile, H: int, *,
                fill_mode: str = "exact") -> SyncPlan:
-    """Build the SyncPlan for any supported algorithm."""
-    n = len(profile)
-    names = tuple(c.name for c in profile.layers)
-    if algo in ("ssgd", "wfbp", "ascwfbp"):
-        return SyncPlan(algo=algo, H=1, n_units=n,
-                        phase_units=(tuple(range(n)),),
-                        fill_units=((),), unit_names=names)
-    if algo == "flsgd":
-        phases = tuple(() for _ in range(H - 1)) + (tuple(range(n)),)
-        return SyncPlan(algo=algo, H=H, n_units=n, phase_units=phases,
-                        fill_units=tuple(() for _ in range(H)),
-                        unit_names=names)
-    if algo == "plsgd-enp":
-        return _plan_from_partition(algo, profile, H,
-                                    enp_schedule(profile, H), None)
-    if algo == "dreamddp":
-        res = dreamddp_schedule(profile, H)
-        fills = fill_bubbles(profile, res.partition, mode=fill_mode)
-        return _plan_from_partition(algo, profile, H, res, fills)
-    if algo == "dreamddp-bf":   # brute-force reference (Fig. 15)
-        res = brute_force_schedule(profile, H)
-        fills = fill_bubbles(profile, res.partition, mode=fill_mode)
-        return _plan_from_partition(algo, profile, H, res, fills)
-    raise ValueError(f"unknown algo {algo!r}; choose from {ALGOS}")
+    """Build the SyncPlan for any registered strategy (registry shim).
+
+    The algorithm dispatch lives in the :mod:`repro.api` strategy registry;
+    this function only keeps the historical entry point alive.
+    """
+    from ..api.registry import available_strategies, get_strategy
+    try:
+        strategy = get_strategy(algo)
+    except KeyError:
+        raise ValueError(f"unknown algo {algo!r}; choose from "
+                         f"{available_strategies()}") from None
+    return strategy.build_plan(profile, H, fill_mode=fill_mode)

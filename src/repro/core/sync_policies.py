@@ -1,0 +1,144 @@
+"""Composable synchronization policies — the *sync hook* of a strategy.
+
+A :class:`SyncPolicy` decides **how** the layer units scheduled for a phase
+are reconciled across workers, independently of **which** units the
+:class:`~repro.core.plans.SyncPlan` schedules:
+
+* :class:`MeanSync` — plain float32 parameter averaging (paper Eq. 5);
+* :class:`Int8EFSync` — int8 quantization with error feedback over the
+  worker axis (beyond-paper, FusionLLM-style adaptive compression);
+* :class:`OuterOptSync` — DiLoCo-style outer Nesterov step on the averaged
+  delta (beyond-paper, see :mod:`repro.core.outer_opt`).
+
+Policies carry their auxiliary state through the two optional
+:class:`~repro.runtime.step.TrainState` slots (``ef`` for compression
+residuals, ``outer`` for the outer optimizer) so checkpoints keep their
+layout: :meth:`SyncPolicy.init_state` returns the ``(ef, outer)`` pair and
+:meth:`SyncPolicy.apply` threads it through each sync.
+
+The step builder (:func:`repro.runtime.step.make_train_step`) only ever
+calls the policy — the old ``StepConfig.compress`` / ``StepConfig.outer``
+flag branches are resolved once by :func:`resolve_policy` and stay
+available for backward compatibility.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .outer_opt import OuterConfig, OuterState, outer_init, outer_sync_units
+from .partial_sync import UnitLayout, contiguous_ranges, sync_units
+
+__all__ = ["SyncPolicy", "MeanSync", "Int8EFSync", "OuterOptSync",
+           "resolve_policy"]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SyncPolicy:
+    """Base policy: plain worker-mean of the scheduled units (Eq. 5)."""
+
+    name = "mean"
+
+    def init_state(self, params: PyTree) -> tuple[PyTree | None,
+                                                  OuterState | None]:
+        """Auxiliary ``(ef, outer)`` state for a worker-stacked tree."""
+        return None, None
+
+    def apply(self, params: PyTree, ef: PyTree | None,
+              outer: OuterState | None, unit_ids: Sequence[int],
+              layout: UnitLayout
+              ) -> tuple[PyTree, PyTree | None, OuterState | None]:
+        """Synchronize ``unit_ids``; returns updated (params, ef, outer)."""
+        return sync_units(params, unit_ids, layout), ef, outer
+
+
+@dataclass(frozen=True)
+class MeanSync(SyncPolicy):
+    """Alias of the base policy, for explicit registration/config."""
+
+
+@dataclass(frozen=True)
+class Int8EFSync(SyncPolicy):
+    """int8 + error-feedback compressed partial sync (worker axis)."""
+
+    name = "int8_ef"
+
+    def init_state(self, params: PyTree):
+        ef = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return ef, None
+
+    def apply(self, params, ef, outer, unit_ids, layout):
+        new_p, new_e = _sync_units_ef(params, ef, unit_ids, layout)
+        return new_p, new_e, outer
+
+
+@dataclass(frozen=True)
+class OuterOptSync(SyncPolicy):
+    """DiLoCo-style outer optimizer applied to each phase's synced units."""
+
+    name = "outer"
+    cfg: OuterConfig = field(default_factory=OuterConfig)
+
+    def init_state(self, params: PyTree):
+        return None, outer_init(params)
+
+    def apply(self, params, ef, outer, unit_ids, layout):
+        new_p, new_o = outer_sync_units(params, outer, unit_ids, layout,
+                                        self.cfg)
+        return new_p, ef, new_o
+
+
+def resolve_policy(cfg: Any) -> SyncPolicy:
+    """Resolve the policy from a :class:`~repro.runtime.step.StepConfig`.
+
+    ``cfg.policy`` (an explicit :class:`SyncPolicy`, e.g. chosen by a
+    :class:`~repro.api.SyncStrategy`) wins; otherwise the legacy
+    ``compress`` / ``outer`` flags map onto the equivalent policy.
+    """
+    policy = getattr(cfg, "policy", None)
+    if policy is not None:
+        return policy
+    if getattr(cfg, "outer", False):
+        return OuterOptSync(cfg=getattr(cfg, "outer_cfg", OuterConfig()))
+    if getattr(cfg, "compress", None) == "int8_ef":
+        return Int8EFSync()
+    return MeanSync()
+
+
+# ---------------------------------------------------------------------------
+# Compressed partial sync (int8 + EF over the worker axis)
+# ---------------------------------------------------------------------------
+
+def _sync_units_ef(params: PyTree, ef: PyTree, unit_ids, layout: UnitLayout
+                   ) -> tuple[PyTree, PyTree]:
+    from ..parallel.compression import compressed_worker_mean
+    grouped = layout.by_group(unit_ids)
+    new_p, new_e = dict(params), dict(ef)
+    for group, idxs in grouped.items():
+        p, e = params[group], ef[group]
+        if idxs == [None]:
+            pair = jax.tree.map(compressed_worker_mean, p, e)
+            is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+            new_p[group] = jax.tree.map(lambda t: t[0], pair, is_leaf=is2)
+            new_e[group] = jax.tree.map(lambda t: t[1], pair, is_leaf=is2)
+            continue
+        ranges = contiguous_ranges([i for i in idxs if i is not None])
+
+        def one(p_, e_):
+            for lo, hi in ranges:
+                s, r = compressed_worker_mean(p_[:, lo:hi], e_[:, lo:hi])
+                p_ = p_.at[:, lo:hi].set(s)
+                e_ = e_.at[:, lo:hi].set(r)
+            return p_, e_
+
+        pair = jax.tree.map(one, p, e)
+        is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+        new_p[group] = jax.tree.map(lambda t: t[0], pair, is_leaf=is2)
+        new_e[group] = jax.tree.map(lambda t: t[1], pair, is_leaf=is2)
+    return new_p, new_e

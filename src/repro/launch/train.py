@@ -1,15 +1,30 @@
-"""End-to-end training driver (runs for real on this CPU container).
+"""End-to-end training driver — the :class:`repro.api.Session` CLI.
 
-Trains a reduced config of any assigned architecture with any ``--algo``
-on the synthetic Markov corpus, with checkpointing and the full DreamDDP
-pipeline (profile -> Algorithm 2 -> bubble fill -> phase-specialized
-steps).  The 100M-parameter example in ``examples/train_100m.py`` wraps
-this module.
+Trains a reduced config of any assigned architecture with any registered
+sync strategy on the synthetic Markov corpus.  The whole pipeline (profile
+-> schedule search -> bubble fill -> phase-specialized steps ->
+fault-tolerant runner) is wired by ``Session(JobConfig(...)).fit(steps)``;
+this module only parses flags.
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --smoke --algo dreamddp --workers 8 --steps 100 --period 5
+
+``--algo`` accepts any name in the strategy registry — the paper's six
+algorithms plus beyond-paper compositions (``dreamddp-int8``,
+``hier-2tier``, ...).  To add your own::
+
+    from repro.api import SyncStrategy, register_strategy
+
+    @register_strategy("my-algo")
+    class MyAlgo(SyncStrategy):
+        def build_plan(self, profile, H, *, fill_mode="exact"):
+            ...  # any repro.core.plans.SyncPlan construction
+
+then launch with ``--algo my-algo`` (import your module first, e.g. via a
+wrapper script).  The 100M-parameter example in ``examples/train_100m.py``
+shows the :class:`~repro.api.Session` model-override path.
 """
 
 from __future__ import annotations
@@ -18,8 +33,6 @@ import argparse
 import json
 import time
 
-import jax
-
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -27,7 +40,7 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU-sized)")
     ap.add_argument("--algo", default="dreamddp",
-                    choices=("ssgd", "flsgd", "plsgd-enp", "dreamddp"))
+                    help="any registered sync strategy (see repro.api)")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--period", type=int, default=5, help="H")
@@ -43,51 +56,40 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
-    from ..checkpoint import CheckpointManager
-    from ..configs import get_arch
-    from ..core import HardwareSpec, analytic_profile, build_plan
-    from ..data import MarkovCorpus
-    from ..optim import make_optimizer
-    from ..runtime import (Runner, RunnerConfig, StepConfig,
-                           init_train_state)
+    from ..api import JobConfig, Session, available_strategies
 
-    arch = get_arch(args.arch)
-    model = arch.make_smoke() if args.smoke else arch.make_model()
-    cfg = model.cfg
-    vocab = cfg.vocab
+    if args.algo not in available_strategies():
+        ap.error(f"unknown --algo {args.algo!r}; registered: "
+                 f"{', '.join(available_strategies())}")
+
+    sess = Session(JobConfig(
+        arch=args.arch, algo=args.algo, workers=args.workers,
+        period=args.period, bandwidth=args.bandwidth,
+        batch_per_worker=args.batch_per_worker, seq=args.seq,
+        smoke=args.smoke, lr=args.lr, warmup_steps=10,
+        decay_steps=max(args.steps, 100), compress=args.compress,
+        outer=args.outer, track_divergence=args.track_divergence,
+        ckpt_dir=args.ckpt_dir))
+
+    model = sess.model
     print(f"arch={args.arch} smoke={args.smoke} "
           f"params={model.param_count() / 1e6:.1f}M algo={args.algo} "
           f"W={args.workers} H={args.period}")
-
-    hw = HardwareSpec(bandwidth=args.bandwidth, n_workers=args.workers)
-    prof = analytic_profile(
-        model.layer_costs(args.batch_per_worker, args.seq), hw)
-    plan = build_plan(args.algo, prof, args.period)
+    plan = sess.plan
     print(f"plan: {plan.meta.get('partition_counts')} "
           f"extra_syncs={plan.meta.get('extra_syncs')}")
 
-    opt = make_optimizer("adam", lr=args.lr, warmup_steps=10,
-                         decay_steps=max(args.steps, 100))
-    scfg = StepConfig(compress=args.compress, outer=args.outer,
-                      track_divergence=args.track_divergence)
-    state = init_train_state(model, opt, jax.random.PRNGKey(0),
-                             args.workers, cfg=scfg)
-    data = MarkovCorpus(vocab=vocab, seq_len=args.seq,
-                        batch_per_worker=args.batch_per_worker,
-                        n_workers=args.workers)
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    runner = Runner(model, opt, plan, data, ckpt=ckpt, step_cfg=scfg)
-
     t0 = time.time()
-    state = runner.run(state, args.steps)
+    sess.fit(args.steps)
     dt = time.time() - t0
-    losses = [h["loss"] for h in runner.history]
-    print(f"steps={len(runner.history)} loss {losses[0]:.4f} -> "
+    losses = [h["loss"] for h in sess.history]
+    data = sess.runner.data
+    print(f"steps={len(sess.history)} loss {losses[0]:.4f} -> "
           f"{losses[-1]:.4f} (floor~{data.entropy_floor():.3f}) "
           f"[{dt:.1f}s, {dt / max(len(losses), 1) * 1e3:.0f} ms/step]")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            json.dump(runner.history, f)
+            json.dump(sess.history, f)
     return 0
 
 

@@ -25,13 +25,32 @@ import jax
 import jax.numpy as jnp
 
 from ..checkpoint import CheckpointManager, reshard_workers
-from ..core.plans import SyncPlan
+from ..core.plans import SyncPlan, local_plan
 from ..core.partial_sync import sync_units
 from .step import StepConfig, TrainState, make_train_step
 
-__all__ = ["RunnerConfig", "Runner"]
+__all__ = ["RunnerConfig", "Runner", "reshard_train_state"]
 
 PyTree = Any
+
+
+def reshard_train_state(state: TrainState, n_workers: int) -> TrainState:
+    """Map a worker-stacked TrainState onto a new worker count.
+
+    Replicas are averaged and re-broadcast (see
+    :func:`repro.checkpoint.reshard_workers`) — a synchronization point,
+    so Lemma 4's bounded-staleness argument survives membership changes.
+    Shared by :meth:`Runner.restore_elastic` and ``Session.replan``.
+    """
+    return TrainState(
+        params=reshard_workers(state.params, n_workers),
+        opt_state=reshard_workers(state.opt_state, n_workers),
+        step=state.step,
+        ef=None if state.ef is None else
+        reshard_workers(state.ef, n_workers),
+        outer=None if state.outer is None else jax.tree.map(
+            lambda x: reshard_workers(x, n_workers), state.outer),
+    )
 
 
 @dataclass(frozen=True)
@@ -54,21 +73,37 @@ class Runner:
     run_cfg: RunnerConfig = field(default_factory=RunnerConfig)
 
     def __post_init__(self):
-        self._steps = [jax.jit(make_train_step(
-            self.model, self.optimizer, self.plan, h, cfg=self.step_cfg))
-            for h in range(self.plan.H)]
-        # a pure local step (no sync) for straggler-skipped phases
-        self._local = jax.jit(make_train_step(
-            self.model, self.optimizer,
-            SyncPlan(algo="flsgd", H=2, n_units=self.plan.n_units,
-                     phase_units=((), tuple(range(self.plan.n_units))),
-                     fill_units=((), ())), 0, cfg=self.step_cfg))
-        self._makeup_cache: dict[tuple, Callable] = {}
+        self._build_steps()
         self._times: list[float] = []
         self.history: list[dict] = []
         self.pending_units: set[int] = set()
         self.skipped_syncs = 0
         self.retries = 0
+
+    def _build_steps(self) -> None:
+        """(Re)compile the phase-specialized steps for the current plan."""
+        self._steps = [jax.jit(make_train_step(
+            self.model, self.optimizer, self.plan, h, cfg=self.step_cfg))
+            for h in range(self.plan.H)]
+        # a pure local step (no sync) for straggler-skipped phases
+        self._local = jax.jit(make_train_step(
+            self.model, self.optimizer, local_plan(self.plan.n_units), 0,
+            cfg=self.step_cfg))
+        self._makeup_cache: dict[tuple, Callable] = {}
+
+    def replan(self, new_plan: SyncPlan) -> None:
+        """Hot-swap the schedule mid-run (elasticity / bandwidth drift).
+
+        Pending straggler make-ups are kept — unit ids refer to the same
+        network-order layout — but the phase executables are rebuilt so
+        every subsequent step runs the new partition.
+        """
+        if new_plan.n_units != self.plan.n_units:
+            raise ValueError(
+                f"replan changed the unit count ({self.plan.n_units} -> "
+                f"{new_plan.n_units}); the model layout must be stable")
+        self.plan = new_plan
+        self._build_steps()
 
     # ------------------------------------------------------------------ util
     def _median_time(self) -> float:
@@ -112,9 +147,20 @@ class Runner:
                     fn = self._steps[phase]
                 state, metrics = fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
-            except Exception as e:                    # noqa: BLE001
-                if self.ckpt is None or self.retries >= \
-                        self.run_cfg.max_retries:
+            except Exception:                         # noqa: BLE001
+                # Only swallow the failure if a checkpoint actually exists
+                # to restart from — otherwise a restore FileNotFoundError
+                # would mask the real error.  latest_step() itself may
+                # raise (it surfaces a failed async save); never let that
+                # replace the training exception.
+                can_restore = False
+                if self.ckpt is not None and \
+                        self.retries < self.run_cfg.max_retries:
+                    try:
+                        can_restore = self.ckpt.latest_step() is not None
+                    except Exception:                 # noqa: BLE001
+                        can_restore = False
+                if not can_restore:
                     raise
                 self.retries += 1
                 r0, state, _ = self._restore_into(state)
@@ -159,15 +205,6 @@ class Runner:
                         new_plan: SyncPlan) -> tuple[int, TrainState]:
         """Restore onto a different worker count (elastic membership)."""
         step, state, _ = self.ckpt.restore(template)
-        state = TrainState(
-            params=reshard_workers(state.params, n_workers),
-            opt_state=reshard_workers(state.opt_state, n_workers),
-            step=state.step,
-            ef=None if state.ef is None else
-            reshard_workers(state.ef, n_workers),
-            outer=None if state.outer is None else jax.tree.map(
-                lambda x: reshard_workers(x, n_workers), state.outer),
-        )
-        self.plan = new_plan
-        self.__post_init__()
+        state = reshard_train_state(state, n_workers)
+        self.replan(new_plan)
         return int(state.step), state

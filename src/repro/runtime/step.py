@@ -7,31 +7,30 @@ stack is split (``segment_cuts``) at the interval boundary so the phase's
 parameter all-reduce is data-independent of the remaining backward segments
 — the overlap window XLA's latency-hiding scheduler uses (DESIGN.md §2).
 
-Semantics per algorithm (``plan.algo``):
-
-* ``ssgd`` / ``wfbp`` / ``ascwfbp`` — gradients are worker-averaged every
-  step *before* the optimizer (classic DDP; wfbp variants differ only in
-  the simulated time model, the SPMD execution is identical);
-* ``flsgd`` / ``plsgd-enp`` / ``dreamddp`` — local update first, then the
-  phase's layer units are parameter-averaged (Eq. 5), optionally through
-  int8+error-feedback compression or a DiLoCo-style outer optimizer
-  (both beyond-paper, off by default).
+The step builder is algorithm-agnostic: the plan's ``comm`` field (data,
+set by the :class:`~repro.api.SyncStrategy` that built it) says whether
+gradients are worker-averaged before the optimizer (classic DDP) or the
+phase's layer units are parameter-averaged after the local update (Eq. 5),
+and the *how* of each parameter sync is a composable
+:class:`~repro.core.sync_policies.SyncPolicy` (plain mean / int8+EF /
+DiLoCo outer step) resolved once per step build — there is no per-algorithm
+branching here.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.outer_opt import OuterConfig, OuterState, outer_init, \
-    outer_sync_units
+from ..core.outer_opt import OuterConfig, OuterState
 from ..core.partial_sync import (UnitLayout, contiguous_ranges, divergence,
-                                 sync_units, tree_worker_mean)
+                                 tree_worker_mean)
 from ..core.plans import SyncPlan
+from ..core.sync_policies import SyncPolicy, resolve_policy
 from ..optim.optimizers import Optimizer
 
 __all__ = ["TrainState", "StepConfig", "init_train_state",
@@ -52,9 +51,10 @@ class TrainState(NamedTuple):
 @dataclass(frozen=True)
 class StepConfig:
     n_microbatches: int = 1
-    compress: str | None = None       # None | "int8_ef"
-    outer: bool = False               # DiLoCo outer optimizer on syncs
-    outer_cfg: OuterConfig = OuterConfig()
+    policy: SyncPolicy | None = None  # explicit sync policy (wins)
+    compress: str | None = None       # legacy flag: None | "int8_ef"
+    outer: bool = False               # legacy flag: DiLoCo outer optimizer
+    outer_cfg: OuterConfig = field(default_factory=OuterConfig)
     track_divergence: bool = False
     segment_cuts: bool = True         # split scans at the sync interval
 
@@ -65,44 +65,9 @@ def init_train_state(model, optimizer: Optimizer, key, n_workers: int,
     from ..core.partial_sync import worker_stack
     params = worker_stack(model.init(key), n_workers)
     opt_state = optimizer.init(params)
-    ef = (jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
-          if cfg.compress == "int8_ef" else None)
-    outer = outer_init(params) if cfg.outer else None
+    ef, outer = resolve_policy(cfg).init_state(params)
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32), ef,
                       outer)
-
-
-# ---------------------------------------------------------------------------
-# Compressed partial sync (int8 + EF over the worker axis)
-# ---------------------------------------------------------------------------
-
-def _sync_units_ef(params: PyTree, ef: PyTree, unit_ids, layout: UnitLayout
-                   ) -> tuple[PyTree, PyTree]:
-    from ..parallel.compression import compressed_worker_mean
-    grouped = layout.by_group(unit_ids)
-    new_p, new_e = dict(params), dict(ef)
-    for group, idxs in grouped.items():
-        p, e = params[group], ef[group]
-        if idxs == [None]:
-            pair = jax.tree.map(compressed_worker_mean, p, e)
-            is2 = lambda t: isinstance(t, tuple) and len(t) == 2
-            new_p[group] = jax.tree.map(lambda t: t[0], pair, is_leaf=is2)
-            new_e[group] = jax.tree.map(lambda t: t[1], pair, is_leaf=is2)
-            continue
-        ranges = contiguous_ranges([i for i in idxs if i is not None])
-
-        def one(p_, e_):
-            for lo, hi in ranges:
-                s, r = compressed_worker_mean(p_[:, lo:hi], e_[:, lo:hi])
-                p_ = p_.at[:, lo:hi].set(s)
-                e_ = e_.at[:, lo:hi].set(r)
-            return p_, e_
-
-        pair = jax.tree.map(one, p, e)
-        is2 = lambda t: isinstance(t, tuple) and len(t) == 2
-        new_p[group] = jax.tree.map(lambda t: t[0], pair, is_leaf=is2)
-        new_e[group] = jax.tree.map(lambda t: t[1], pair, is_leaf=is2)
-    return new_p, new_e
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +90,7 @@ def make_train_step(model, optimizer: Optimizer, plan: SyncPlan, phase: int,
     layout = model.unit_layout()
     units = plan.units_for_phase(phase)
     cuts = _cuts_for(units, layout) if cfg.segment_cuts else ()
+    policy = resolve_policy(cfg)
 
     def per_worker_grads(params, batch):
         """Per-worker loss+grads.  With ``n_microbatches > 1`` the batch
@@ -153,20 +119,14 @@ def make_train_step(model, optimizer: Optimizer, plan: SyncPlan, phase: int,
         metrics = {"loss": jnp.mean(losses)}
 
         if not plan.is_parameter_sync:
-            grads = tree_worker_mean(grads)      # S-SGD: gradient all-reduce
+            grads = tree_worker_mean(grads)      # DDP: gradient all-reduce
 
         new_params, new_opt = optimizer.update(grads, state.opt_state,
                                                state.params, state.step)
         new_ef, new_outer = state.ef, state.outer
         if plan.is_parameter_sync and units:
-            if cfg.outer:
-                new_params, new_outer = outer_sync_units(
-                    new_params, state.outer, units, layout, cfg.outer_cfg)
-            elif cfg.compress == "int8_ef":
-                new_params, new_ef = _sync_units_ef(
-                    new_params, state.ef, units, layout)
-            else:
-                new_params = sync_units(new_params, units, layout)
+            new_params, new_ef, new_outer = policy.apply(
+                new_params, state.ef, state.outer, units, layout)
         if cfg.track_divergence:
             metrics["divergence"] = divergence(new_params)
         new_state = TrainState(new_params, new_opt, state.step + 1,

@@ -1,7 +1,8 @@
 """Eq. 7/8 time model: algebraic identities + baseline orderings."""
 
+import random
+
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.time_model import (Partition, flsgd_period_time, objective,
                                    simulate_period, simulate_phase,
@@ -48,12 +49,14 @@ def test_empty_phase_is_local_step(profile12):
     assert tl.exposed_comm == 0.0
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(2, 12), st.integers(2, 5), st.integers(0, 999))
-def test_objective_vs_exact_timeline(L, H, seed):
+@pytest.mark.parametrize("seed", range(20))
+def test_objective_vs_exact_timeline(seed):
     """Eq. 8 (sum-comm approximation) is a LOWER bound on the exact
     event timeline only up to serialization effects; both must bound the
-    pure-compute floor from below."""
+    pure-compute floor from below.  (Seeded replacement for the
+    hypothesis property.)"""
+    rng = random.Random(seed)
+    L, H = rng.randint(2, 12), rng.randint(2, 5)
     prof = random_profile(L, seed=seed)
     part = Partition.equal_number(L, H)
     floor = H * (prof.t_fp_total + prof.t_bp_total)
