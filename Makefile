@@ -1,8 +1,12 @@
-.PHONY: test test-fast bench
+.PHONY: test test-all test-fast bench sim
 
-# Tier-1 suite (ROADMAP.md verify command)
+# Tier-1 suite (scripts/ci.sh; deselects tests marked `slow`)
 test:
 	./scripts/ci.sh
+
+# Everything, including slow end-to-end tests (ROADMAP.md verify command)
+test-all:
+	PYTHONPATH=src python -m pytest -x -q
 
 # Skip the slow end-to-end training tests
 test-fast:
@@ -10,3 +14,8 @@ test-fast:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run --fast
+
+# Full SimNet scenario library: conformance sweep + sim-marked tests
+sim:
+	PYTHONPATH=src python -m repro.sim
+	PYTHONPATH=src python -m pytest -q -m sim

@@ -71,6 +71,16 @@ def main(argv=None) -> int:
             if r["obj_gap_pct"] > 2.0:
                 failures.append(("fig15", r))
 
+    _section("SimNet: per-scenario period time (geo-cluster simulator)")
+    sim_rows = bench_scheduling.run_scenarios(H=5)
+    by_scenario: dict = {}
+    for r in sim_rows:
+        by_scenario.setdefault(r["scenario"], {})[r["algo"]] = \
+            r["mean_period_s"]
+    for name, per in by_scenario.items():
+        if per["dreamddp"] > per["flsgd"] * 1.05 + 1e-12:
+            failures.append(("simnet", (name, per)))
+
     _section("Fig 16: search complexity")
     for r in bench_search_complexity.run():
         if r["dd_nodes"] > r["bf_solutions"]:

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification (matches ROADMAP.md): the full pytest suite from the
-# repo root with the src layout on the path.
+# Tier-1 verification (matches ROADMAP.md): the pytest suite from the repo
+# root with the src layout on the path.  Tests marked `slow` are deselected
+# to keep tier-1 fast — run them with `make test-all` (or plain pytest).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    -m "not slow" "$@"

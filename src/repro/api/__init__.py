@@ -7,7 +7,9 @@ Two ideas:
   special-cased across the codebase;
 * a training job is **data** (:class:`JobConfig`), and :class:`Session`
   turns it into a running system — ``.fit(n)``, ``.profile()``, ``.plan``,
-  ``.replan(bandwidth=..., workers=...)``, ``.serve()``.
+  ``.replan(bandwidth=..., workers=...)``, ``.serve()``, and
+  ``.simulate(scenario)`` (replay through the :mod:`repro.sim`
+  geo-cluster simulator, no cluster required).
 
 Quick start::
 

@@ -12,6 +12,7 @@ duplicate::
     sess.replan(bandwidth=1e8)         # link drifted: re-solve + hot-swap
     sess.fit(100)                      # continue on the new schedule
     handle = sess.serve()              # inference on the trained replica
+    sess.simulate("churn")             # replay the plan through SimNet
 
 Everything is lazy: ``.plan`` / ``.profile()`` work without ever building
 training state (analysis-only usage), and ``.fit`` builds the runner on
@@ -266,6 +267,55 @@ class Session:
             self._runner.step_cfg = scfg
             self._runner.replan(self._plan)
         return self._plan
+
+    # ----------------------------------------------------------- simulation
+    def simulate(self, scenario, *, periods: int | None = None,
+                 replan: bool = True, n_channels: int = 1,
+                 profile: LayerProfile | None = None):
+        """Replay this job's schedule through a virtual geo-cluster.
+
+        ``scenario`` is a :class:`repro.sim.Scenario` or a library name
+        (``"drifting-bandwidth"``, ``"churn"``, ...).  Pure analysis: no
+        training state is built.  The strategy's plan is solved against
+        the scenario's network at t=0 and replayed by
+        :class:`repro.sim.SimExecutor`; with ``replan=True`` (the
+        default) every schedule-relevant event — bandwidth drift, link
+        degradation, elastic join/leave — triggers a re-solve at the
+        next period boundary, exactly like a live ``.replan()`` call.
+
+        ``profile`` substitutes an external :class:`LayerProfile` for the
+        model-derived one (benchmarks replay paper models this way
+        without building the model).
+
+        Returns a :class:`repro.sim.SimReport` (trace + plan history).
+        """
+        from ..sim import (REPLAN_EVENTS, SimExecutor, SimReport,
+                           get_scenario, prepare_run)
+        if isinstance(scenario, str):
+            scenario = get_scenario(scenario)
+        base = self.profile() if profile is None else profile
+        cluster, plan = prepare_run(scenario, self.strategy,
+                                    self.cfg.period, base,
+                                    fill_mode=self.cfg.fill_mode)
+        ex = SimExecutor(base, plan, cluster, n_channels=n_channels)
+        plans = [(0, plan)]
+
+        def on_events(executor, fired):
+            if not replan or not any(isinstance(e, REPLAN_EVENTS)
+                                     for e in fired):
+                return None
+            eff = cluster.effective_profile(base, executor.clock)
+            new_plan = self.strategy.build_plan(
+                eff, executor.plan.H, fill_mode=self.cfg.fill_mode)
+            if new_plan.fingerprint() == executor.plan.fingerprint():
+                return None
+            plans.append((executor.iteration // executor.plan.H,
+                          new_plan))
+            return new_plan
+
+        trace = ex.run(periods if periods is not None else scenario.periods,
+                       on_events=on_events)
+        return SimReport(scenario=scenario.name, trace=trace, plans=plans)
 
     # ------------------------------------------------------------- serving
     def serve(self, *, worker: int = 0) -> "InferenceSession":

@@ -1,0 +1,6 @@
+"""``python -m repro.sim`` — conformance-sweep the scenario library."""
+
+from .scenarios import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.bubble_fill import fill_bubbles
 from repro.core.schedule import dreamddp_schedule
-from repro.core.time_model import simulate_period
+from repro.core.time_model import simulate_period, simulate_phase
 
 from conftest import random_profile
 
@@ -44,3 +44,40 @@ def test_sync_counts_at_least_one():
     counts = fills.sync_counts(res.partition)
     assert all(c >= 1 for c in counts)
     assert sum(counts) == 10 + fills.extra_syncs
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("mode", ["eq12", "exact"])
+@pytest.mark.parametrize("bandwidth", [1e8, 1e9, 5e9, 2e10])
+def test_fills_never_slow_down_any_phase(seed, mode, bandwidth):
+    """Per-phase invariant (stronger than the period-level check): each
+    admitted fill leaves that phase's exact event timeline no slower —
+    for BOTH admission modes, even though eq12 only reasons about the
+    closed-form budget."""
+    prof = random_profile(14, seed=seed, bandwidth=bandwidth)
+    res = dreamddp_schedule(prof, 4)
+    fills = fill_bubbles(prof, res.partition, mode=mode)
+    for h, (s, e) in enumerate(res.partition.bp_intervals()):
+        own = set(range(s, e))
+        base = simulate_phase(prof, sorted(own)).iteration_time
+        filled = simulate_phase(
+            prof, sorted(own | set(fills.fills[h]))).iteration_time
+        assert filled <= base + 1e-9, (h, mode, fills.fills[h])
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("mode", ["eq12", "exact"])
+def test_fill_sync_counts_cover_every_position(seed, mode):
+    """FillResult.sync_counts >= 1 everywhere, and bookkeeping matches
+    the per-phase fill lists exactly."""
+    prof = random_profile(12, seed=seed, bandwidth=10 ** (9 + seed % 2))
+    res = dreamddp_schedule(prof, 4)
+    fills = fill_bubbles(prof, res.partition, mode=mode)
+    counts = fills.sync_counts(res.partition)
+    assert len(counts) == 12
+    assert all(c >= 1 for c in counts)
+    assert sum(counts) == 12 + sum(len(f) for f in fills.fills)
+    assert fills.extra_syncs == sum(len(f) for f in fills.fills)
+    # fills are disjoint from the phase's own interval
+    for (s, e), extra in zip(res.partition.bp_intervals(), fills.fills):
+        assert not (set(range(s, e)) & set(extra))

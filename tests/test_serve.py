@@ -1,0 +1,32 @@
+"""Smoke test for the batched serving driver (launch/serve.py)."""
+
+import pytest
+
+from repro.launch import serve
+
+
+def test_serve_main_smoke(capsys):
+    rc = serve.main(["--arch", "qwen3-1.7b", "--smoke", "--batch", "2",
+                     "--prompt-len", "8", "--gen", "3"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "prefill[2x8]" in out
+    assert "ms/tok" in out
+    assert "generated:" in out
+
+
+def test_serve_main_single_token(capsys):
+    """gen=1: no decode steps; the ms/tok division must not blow up."""
+    rc = serve.main(["--arch", "qwen3-1.7b", "--smoke", "--batch", "1",
+                     "--prompt-len", "4", "--gen", "1"])
+    assert rc == 0
+    assert "decode 0 steps" in capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_serve_main_audio_frontend(capsys):
+    """The audio frontend wires extra inputs through prefill."""
+    rc = serve.main(["--arch", "whisper-medium", "--smoke", "--batch", "1",
+                     "--prompt-len", "4", "--gen", "2"])
+    assert rc == 0
+    assert "ms/tok" in capsys.readouterr().out

@@ -1,0 +1,126 @@
+"""SimExecutor: conformance with time_model + byte-identical determinism."""
+
+import pytest
+
+from repro.core.plans import build_plan
+from repro.core.schedule import dreamddp_schedule
+from repro.core.time_model import simulate_period
+from repro.sim import (LinkSpec, NetworkModel, Scenario, SimExecutor,
+                       StragglerOnset, Topology, Trace, VirtualCluster,
+                       synthetic_profile)
+
+from conftest import random_profile
+
+
+def _static_cluster(profile, H, *, n=8, jitter=0.0, seed=0):
+    net = NetworkModel(
+        Topology(n), LinkSpec(bandwidth=profile.hw.bandwidth,
+                              latency=profile.hw.latency, jitter=jitter))
+    return VirtualCluster(net, (), H=H, seed=seed)
+
+
+# ------------------------------------------------------------ conformance
+
+@pytest.mark.parametrize("algo", ["dreamddp", "plsgd-enp", "flsgd"])
+@pytest.mark.parametrize("seed", range(3))
+def test_static_run_matches_time_model_exactly(algo, seed):
+    """On a static flat network the executor IS the tau-recursion: every
+    iteration time equals simulate_period's, to float round-off."""
+    H = 4
+    prof = random_profile(12, seed=seed)
+    plan = build_plan(algo, prof, H)
+    ex = SimExecutor(prof, plan,
+                     _static_cluster(prof, plan.H, n=prof.hw.n_workers))
+    trace = ex.run(2)
+
+    from repro.core.time_model import simulate_phase
+    n = plan.n_units
+    for r in range(trace.n_iterations):
+        h = plan.phase_of_iteration(r)
+        positions = sorted(n - 1 - u for u in plan.phase_units[h])
+        expected = simulate_phase(prof, positions).iteration_time
+        assert trace.iteration_time(r) == pytest.approx(expected,
+                                                        rel=1e-12)
+
+
+def test_dreamddp_fills_reproduced_in_sim():
+    """Plan fills (§3.4) flow through phase_units into the replay."""
+    H = 4
+    prof = random_profile(16, seed=1)
+    plan = build_plan("dreamddp", prof, H)
+    res = dreamddp_schedule(prof, H)
+    n = plan.n_units
+    fills = [[n - 1 - u for u in f] for f in plan.fill_units]
+    ex = SimExecutor(prof, plan, _static_cluster(prof, H))
+    trace = ex.run(1)
+    tls = simulate_period(prof, res.partition, fills)
+    assert trace.period_time(0) == pytest.approx(
+        sum(t.iteration_time for t in tls), rel=1e-12)
+
+
+def test_multi_channel_comm():
+    prof = random_profile(10, seed=2)
+    plan = build_plan("wfbp", prof, 1)
+    one = SimExecutor(prof, plan, _static_cluster(prof, 1)).run(3)
+    four = SimExecutor(prof, plan, _static_cluster(prof, 1),
+                       n_channels=4).run(3)
+    assert four.makespan <= one.makespan + 1e-12
+
+
+# ------------------------------------------------------------ determinism
+
+def _run_scenario(scenario, seed_override=None, periods=2):
+    import dataclasses
+    sc = scenario if seed_override is None else \
+        dataclasses.replace(scenario, seed=seed_override)
+    prof = synthetic_profile()
+    cluster = sc.build(4)
+    plan = build_plan("dreamddp", cluster.effective_profile(prof, 0.0), 4)
+    return SimExecutor(prof, plan, cluster).run(periods)
+
+
+def test_identical_seeds_byte_identical_traces():
+    sc = Scenario(name="jittered", description="",
+                  intra=LinkSpec(bandwidth=1e9, latency=1e-4, jitter=0.1),
+                  events=(StragglerOnset(period=1, worker=2,
+                                         slowdown=2.0),),
+                  periods=2, seed=7)
+    a, b = _run_scenario(sc), _run_scenario(sc)
+    assert a.to_json() == b.to_json()
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_different_seed_changes_jittered_trace():
+    sc = Scenario(name="jittered", description="",
+                  intra=LinkSpec(bandwidth=1e9, latency=1e-4, jitter=0.1),
+                  periods=2, seed=7)
+    assert _run_scenario(sc).fingerprint() != \
+        _run_scenario(sc, seed_override=8).fingerprint()
+
+
+def test_zero_jitter_seed_invariant():
+    """Without jitter the replay is seed-independent by construction."""
+    sc = Scenario(name="plain", description="", periods=2, seed=0)
+    assert _run_scenario(sc).fingerprint() == \
+        _run_scenario(sc, seed_override=99).fingerprint()
+
+
+def test_trace_json_roundtrip():
+    sc = Scenario(name="plain", description="", periods=2,
+                  events=(StragglerOnset(period=1, worker=0,
+                                         slowdown=3.0,
+                                         duration_periods=1),))
+    tr = _run_scenario(sc)
+    tr2 = Trace.from_json(tr.to_json())
+    assert tr2.to_json() == tr.to_json()
+    assert tr2.period_times() == tr.period_times()
+    assert len(tr2.events) == 1
+
+
+# ----------------------------------------------------------------- guards
+
+def test_plan_profile_unit_mismatch_rejected():
+    prof = random_profile(10)
+    plan = build_plan("dreamddp", random_profile(8), 4)
+    with pytest.raises(ValueError):
+        SimExecutor(prof, plan, _static_cluster(prof, 4))

@@ -1,0 +1,112 @@
+"""SimNet network model: drift integration, degradation, topology."""
+
+import pytest
+
+from repro.core.profiler import HardwareSpec, ring_allreduce_time
+from repro.sim import DriftTrace, LinkSpec, NetworkModel, Topology
+from repro.sim.network import ring_factor
+
+
+def _flat(bw=1e9, lat=0.0, n=8, drift=None):
+    return NetworkModel(Topology(n), LinkSpec(bandwidth=bw, latency=lat),
+                        drift=drift)
+
+
+# ------------------------------------------------------------- transfers
+
+def test_static_transfer_time():
+    net = _flat(bw=1e9)
+    assert net.transfer_time("intra", 1e9, 0.0) == pytest.approx(1.0)
+    assert net.transfer_time("intra", 0.0, 5.0) == 0.0
+
+
+def test_transfer_integrates_across_drift_breakpoint():
+    """1 GB at 1 GB/s from t=0, but bandwidth halves at t=0.5: the first
+    0.5 s ships 0.5 GB, the rest takes 1.0 s at 0.5 GB/s -> 1.5 s."""
+    net = _flat(bw=1e9, drift={"intra": DriftTrace(((0.5, 5e8),))})
+    assert net.transfer_time("intra", 1e9, 0.0) == pytest.approx(1.5)
+    # started after the breakpoint: pure 0.5 GB/s
+    assert net.transfer_time("intra", 1e9, 1.0) == pytest.approx(2.0)
+
+
+def test_transfer_stalls_through_outage_window():
+    """A factor-0 degradation is an outage: bytes flow only outside it."""
+    net = _flat(bw=1e9)
+    h = net.degrade("intra", 0.0, 1.0)
+    net.end_degradation(h, 2.0)
+    # 1.5 GB from t=0: 1 GB ships in [0,1), stall [1,2), 0.5 GB in [2,2.5)
+    assert net.transfer_time("intra", 1.5e9, 0.0) == pytest.approx(2.5)
+
+
+def test_permanent_zero_bandwidth_raises():
+    net = _flat(bw=1e9)
+    net.set_bandwidth("intra", 0.0, 1.0)
+    with pytest.raises(RuntimeError):
+        net.transfer_time("intra", 2e9, 0.0)
+
+
+def test_degradation_multiplies_drifted_bandwidth():
+    net = _flat(bw=1e9)
+    net.set_bandwidth("intra", 4e8, 10.0)
+    h = net.degrade("intra", 0.5, 20.0)
+    assert net.bandwidth_at("intra", 0.0) == 1e9
+    assert net.bandwidth_at("intra", 15.0) == 4e8
+    assert net.bandwidth_at("intra", 25.0) == 2e8
+    net.end_degradation(h, 30.0)
+    assert net.bandwidth_at("intra", 35.0) == 4e8
+
+
+# ------------------------------------------------------------ collectives
+
+def test_flat_collective_matches_profiler_ring():
+    """The conformance bedrock: a static flat network reproduces
+    ring_allreduce_time bit-for-bit (incl. the K >= 2 clamp)."""
+    for k in (1, 2, 5, 8):
+        hw = HardwareSpec(bandwidth=1e9, latency=3e-4, n_workers=k)
+        net = NetworkModel(Topology(max(k, 1)),
+                           LinkSpec(bandwidth=1e9, latency=3e-4))
+        got = net.collective_time(12345678.0, 0.0,
+                                  workers_by_dc=[k])
+        assert got == ring_allreduce_time(12345678.0, hw)
+
+
+def test_two_tier_collective_decomposition():
+    net = NetworkModel(Topology(8, 2), LinkSpec(bandwidth=1e10, latency=1e-4),
+                       LinkSpec(bandwidth=1e8, latency=1e-2))
+    nbytes = 1e8
+    got = net.collective_time(nbytes, 0.0, workers_by_dc=[4, 4])
+    intra = ring_factor(4) * nbytes / 1e10 + 1e-4
+    inter = ring_factor(2) * nbytes / 1e8 + 1e-2
+    assert got == pytest.approx(intra + inter)
+    # a single populated DC skips the inter ring entirely
+    solo = net.collective_time(nbytes, 0.0, workers_by_dc=[4, 0])
+    assert solo == pytest.approx(intra)
+
+
+def test_collective_requires_active_workers():
+    net = _flat()
+    with pytest.raises(ValueError):
+        net.collective_time(1e6, 0.0, workers_by_dc=[0, 0])
+
+
+# --------------------------------------------------------------- topology
+
+def test_topology_round_robin_balanced():
+    topo = Topology(8, 2)
+    assert topo.workers_by_dc(range(8)) == [4, 4]
+    # churn removes the highest ids -> stays balanced
+    assert topo.workers_by_dc(range(6)) == [3, 3]
+
+
+def test_multi_dc_without_inter_link_rejected():
+    with pytest.raises(ValueError):
+        NetworkModel(Topology(4, 2), LinkSpec(bandwidth=1e9))
+
+
+def test_drift_trace_validates_ordering():
+    with pytest.raises(ValueError):
+        DriftTrace(((2.0, 1e9), (1.0, 5e8)))
+    tr = DriftTrace(((1.0, 5e8), (2.0, 2e8)))
+    assert tr.value_at(0.5, 1e9) == 1e9
+    assert tr.value_at(1.5, 1e9) == 5e8
+    assert tr.value_at(2.5, 1e9) == 2e8

@@ -1,0 +1,153 @@
+"""Session.replan / Session.simulate under drift, churn and degradation.
+
+Scenario regression tests the repo could not express before SimNet: the
+facade's replan path must converge to the schedule that is optimal for
+the *new* network conditions, both inside the simulator (replay-driven
+re-solves) and on the live session object (``.replan(bandwidth=...)``).
+"""
+
+import jax
+import pytest
+
+from repro.api import JobConfig, Session, get_strategy
+from repro.models.transformer import DecoderLM, LMConfig
+from repro.sim import (BandwidthDrift, LinkSpec, Scenario, WorkerLeave,
+                       get_scenario)
+
+_CFG = LMConfig(name="t", n_layers=8, d_model=48, n_heads=4, n_kv_heads=2,
+                d_ff=96, vocab=64, param_dtype="float32", remat=False)
+
+
+def _session(algo="dreamddp", *, workers=8, H=4, bandwidth=1e9, **kw):
+    cfg = JobConfig(algo=algo, workers=workers, period=H,
+                    bandwidth=bandwidth, seq=32, batch_per_worker=2,
+                    warmup_steps=2, decay_steps=200, **kw)
+    return Session(cfg, model=DecoderLM(_CFG))
+
+
+# ------------------------------------------------- simulate-driven replans
+
+def test_simulate_replans_to_newly_optimal_partition():
+    """After a drift event the in-sim re-solve must produce exactly the
+    plan the strategy would build for the drifted network."""
+    sess = _session()
+    sc = get_scenario("drifting-bandwidth")
+    report = sess.simulate(sc)
+    assert report.replanned
+    (p0, plan0), (p1, plan1) = report.plans
+    assert (p0, p1) == (0, 1)
+
+    drifted_bw = sc.events[0].bandwidth
+    t1 = report.trace.period_start(1)
+    cluster = sc.build(4)
+    cluster.advance(4, t1)
+    expected = sess.strategy.build_plan(
+        cluster.effective_profile(sess.profile(), t1), 4)
+    assert plan1.phase_units == expected.phase_units
+    assert plan1.meta["partition_counts"] == \
+        expected.meta["partition_counts"]
+    assert plan1.meta["bandwidth"] == drifted_bw
+
+
+def test_simulate_replan_improves_post_drift_period():
+    """Re-planning after drift must not be worse than keeping the stale
+    plan — and for a real drift it should strictly help."""
+    sess = _session()
+    with_replan = sess.simulate("drifting-bandwidth", replan=True)
+    without = sess.simulate("drifting-bandwidth", replan=False)
+    # period 2 is fully post-drift in both runs
+    assert with_replan.trace.period_time(2) <= \
+        without.trace.period_time(2) + 1e-12
+
+
+def test_simulate_churn_replans_on_membership_change():
+    sess = _session()
+    report = sess.simulate("churn")
+    assert report.replanned
+    periods = [p for p, _ in report.plans]
+    assert periods[0] == 0 and all(p >= 1 for p in periods[1:])
+    # final plan was solved for the restored 8-worker membership
+    assert report.final_plan.meta["n_workers"] == 8
+
+
+def test_simulate_no_replan_on_static_scenario():
+    report = _session().simulate("homogeneous")
+    assert not report.replanned
+    assert report.trace.n_periods == 2
+
+
+def test_simulate_mid_period_event_replans_at_next_boundary():
+    """An iteration-scheduled drift that lands mid-period must still
+    trigger the re-solve — deferred to the next period boundary."""
+    sc = Scenario(name="mid-period-drift", description="",
+                  n_workers=8,
+                  events=(BandwidthDrift(iteration=6, link="intra",
+                                         bandwidth=1e7),),
+                  periods=3)
+    report = _session(H=4).simulate(sc)
+    assert report.replanned
+    # fired at iteration 6 (period 1) -> replanned from period 2 on
+    assert [p for p, _ in report.plans] == [0, 2]
+    assert report.final_plan.meta["bandwidth"] == 1e7
+
+
+def test_simulate_custom_scenario_object():
+    sc = Scenario(name="custom-drift", description="",
+                  n_workers=4, intra=LinkSpec(bandwidth=5e9, latency=1e-4),
+                  events=(BandwidthDrift(period=1, link="intra",
+                                         bandwidth=1e8),
+                          WorkerLeave(period=2, n=1)),
+                  periods=3)
+    report = _session(workers=4).simulate(sc)
+    assert report.trace.n_periods == 3
+    assert len(report.trace.events) == 2
+
+
+# ------------------------------------------------- live-session regression
+
+def test_live_replan_matches_simulated_optimum():
+    """The session's own .replan(bandwidth=...) lands on the same
+    partition the simulator converged to after the same drift."""
+    sc = get_scenario("drifting-bandwidth")
+    sess = _session(bandwidth=1e9, latency=sc.intra.latency)
+    report = sess.simulate(sc)
+    assert report.replanned
+    live_plan = sess.replan(bandwidth=sc.events[0].bandwidth)
+    assert live_plan.phase_units == report.final_plan.phase_units
+
+
+@pytest.mark.slow
+def test_replan_under_drift_keeps_training(tmp_path):
+    """Drift mid-run: fit -> replan -> fit keeps descending, and the
+    rebuilt steps execute the new partition."""
+    sess = _session(workers=4, H=4)
+    sess.fit(8)
+    old_units = sess.plan.phase_units
+    sess.replan(bandwidth=2e7)
+    sess.fit(8)
+    assert len(sess.history) == 16
+    losses = [h["loss"] for h in sess.history]
+    assert losses[-1] < losses[0]
+    assert sess.runner.plan.phase_units != old_units or \
+        sess.plan.meta["bandwidth"] == 2e7
+
+
+@pytest.mark.slow
+def test_replan_elastic_leave_then_join_roundtrip():
+    """Elastic membership round-trip 4 -> 2 -> 4 workers mid-run."""
+    sess = _session(workers=4, H=4)
+    sess.fit(4)
+    sess.replan(workers=2)
+    assert jax.tree_util.tree_leaves(sess.state.params)[0].shape[0] == 2
+    sess.fit(4)
+    sess.replan(workers=4)
+    assert jax.tree_util.tree_leaves(sess.state.params)[0].shape[0] == 4
+    sess.fit(4)
+    assert len(sess.history) == 12
+
+
+def test_gradient_sync_strategy_simulates_with_H1():
+    """ssgd forces H == 1; simulate must follow the plan's period."""
+    report = _session(algo="ssgd", H=4).simulate("homogeneous")
+    assert report.final_plan.H == 1
+    assert report.trace.H == 1

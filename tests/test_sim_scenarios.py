@@ -1,0 +1,130 @@
+"""Scenario library: conformance sweep + per-scenario behaviour."""
+
+import pytest
+
+from repro.core.plans import build_plan
+from repro.sim import (SimExecutor, available_scenarios, check_scenario,
+                       get_scenario, synthetic_profile)
+
+pytestmark = pytest.mark.sim
+
+LIBRARY = available_scenarios()
+
+
+# ---------------------------------------------------- conformance sweep
+
+@pytest.mark.parametrize("name", LIBRARY)
+@pytest.mark.parametrize("algo", ["dreamddp", "plsgd-enp", "flsgd"])
+def test_library_conformance(name, algo):
+    """Acceptance criterion: every scenario's simulated period time
+    agrees with time_model.simulate_period on every static window."""
+    report = check_scenario(get_scenario(name), algo=algo, H=4)
+    assert report.checks, f"{name}: no static windows were checkable"
+    assert report.ok, report.summary()
+    assert report.max_rel_err < 1e-9                  # stated tol is 1e-6
+
+
+@pytest.mark.parametrize("name", LIBRARY)
+def test_library_determinism(name):
+    """Acceptance criterion: identical seeds -> byte-identical traces."""
+    fps = [check_scenario(get_scenario(name), algo="dreamddp",
+                          H=4).trace.fingerprint() for _ in range(2)]
+    assert fps[0] == fps[1]
+
+
+@pytest.mark.parametrize("name", LIBRARY)
+def test_library_runs_under_hier_strategy(name):
+    """Beyond-partition plans (hot/cold tiers) replay fine too."""
+    report = check_scenario(get_scenario(name), algo="hier-2tier", H=4)
+    assert report.ok, report.summary()
+
+
+def test_conformance_mid_period_failure_not_misattributed():
+    """An iteration-scheduled (non-boundary) TransientFailure makes its
+    own period non-static but must NOT leak its stall into the next
+    static period's expected time."""
+    from repro.sim import Scenario, TransientFailure
+    sc = Scenario(name="mid-failure", description="", n_workers=8,
+                  events=(TransientFailure(iteration=6, worker=0,
+                                           downtime=0.05),),
+                  periods=3)
+    report = check_scenario(sc, algo="dreamddp", H=4)
+    assert report.skipped_periods == [1]
+    assert [c.period for c in report.checks] == [0, 2]
+    assert report.ok, report.summary()
+
+
+@pytest.mark.parametrize("name", ["straggler", "drifting-bandwidth"])
+def test_conformance_when_strategy_forces_h1(name):
+    """Gradient-sync strategies force plan.H=1; the reference replay must
+    convert event periods with the plan's H, not the requested one."""
+    report = check_scenario(get_scenario(name), algo="ssgd", H=4)
+    assert report.H == 1
+    assert report.checks
+    assert report.ok, report.summary()
+
+
+# ----------------------------------------------------- scenario behaviour
+
+def _simulate(name, algo="dreamddp", H=4):
+    sc = get_scenario(name)
+    prof = synthetic_profile()
+    cluster = sc.build(H)
+    plan = build_plan(algo, cluster.effective_profile(prof, 0.0), H)
+    ex = SimExecutor(prof, plan, cluster)
+    return ex.run(sc.periods), plan
+
+
+def test_straggler_slows_only_its_period():
+    tr, _ = _simulate("straggler")
+    p0, p1, p2 = tr.period_times()
+    assert p1 > p0 * 1.2                 # 2.5x compute on the critical path
+    assert p2 == pytest.approx(p0, rel=1e-9)   # recovers fully
+
+
+def test_drift_slows_following_periods():
+    tr, _ = _simulate("drifting-bandwidth")
+    p0, p1, p2 = tr.period_times()
+    assert p1 > p0                       # 1 GB/s -> 150 MB/s
+    assert p2 == pytest.approx(p1, rel=1e-9)   # drift is permanent
+    assert any(e["kind"] == "BandwidthDrift" for e in tr.events)
+
+
+def test_churn_changes_ring_and_recovers():
+    tr, _ = _simulate("churn")
+    p0, p1, p2 = tr.period_times()
+    # 6-worker ring ships less redundant data than 8-worker ring
+    assert p1 < p0
+    assert p2 == pytest.approx(p0, rel=1e-9)   # back to 8 workers
+    kinds = [e["kind"] for e in tr.events]
+    assert kinds == ["WorkerLeave", "WorkerJoin"]
+
+
+def test_transient_failure_stalls_one_iteration():
+    tr, _ = _simulate("transient-failure")
+    stalls = tr.of_kind("stall")
+    assert len(stalls) == 1
+    assert stalls[0].iteration == 4      # first iteration of period 1
+    assert stalls[0].duration == pytest.approx(0.05)
+    p0, p1, p2 = tr.period_times()
+    assert p1 == pytest.approx(p0 + 0.05, rel=1e-9)
+    assert p2 == pytest.approx(p0, rel=1e-9)
+
+
+def test_degraded_inter_window_recovers():
+    tr, _ = _simulate("degraded-inter")
+    p0, p1, p2 = tr.period_times()
+    assert p1 > p0
+    assert p2 == pytest.approx(p0, rel=1e-9)
+
+
+def test_hier_2tier_charges_both_links():
+    tr, plan = _simulate("hier-2tier")
+    # every synchronized unit pays at least the inter-DC latency (5 ms)
+    comms = tr.of_kind("comm")
+    assert comms and all(iv.duration >= 5e-3 for iv in comms)
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
