@@ -1,4 +1,4 @@
-.PHONY: test test-all test-fast bench sim
+.PHONY: test test-all test-fast bench sim serve-bench
 
 # Tier-1 suite (scripts/ci.sh; deselects tests marked `slow`)
 test:
@@ -14,6 +14,10 @@ test-fast:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run --fast
+
+# Continuous batching vs naive serving loop (writes benchmarks/results/)
+serve-bench:
+	PYTHONPATH=src python -m benchmarks.bench_serve --smoke
 
 # Full SimNet scenario library: conformance sweep + sim-marked tests
 sim:

@@ -10,6 +10,7 @@ Sections:
   fig15    schedule quality vs brute force
   fig16    search complexity
   kernels  Pallas kernels vs oracles + v5e projections
+  serve    continuous batching vs naive loop (bench_serve smoke sweep)
   roofline dry-run roofline table (if artifacts exist)
 
 Asserts the paper's qualitative claims along the way and exits non-zero on
@@ -91,6 +92,13 @@ def main(argv=None) -> int:
         tol = 0.5 if r["kernel"] == "int8_quant" else 0.15
         if r["max_err"] > tol:
             failures.append(("kernels", r))
+
+    _section("Serving: continuous batching vs naive per-batch loop")
+    from . import bench_serve
+    serve_report = bench_serve.run(smoke=True)
+    best = max(r["speedup"] for r in serve_report["rows"])
+    if best < bench_serve.SPEEDUP_BAR:
+        failures.append(("serve", {"best_speedup": best}))
 
     if not args.fast:
         from . import bench_convergence

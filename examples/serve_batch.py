@@ -1,16 +1,54 @@
-"""Batched serving example: prefill + greedy decode on a reduced config.
+"""Continuous-batching serving example on a reduced config.
+
+Submits a mixed-length request set (short + long prompts, one early-EOS
+request, one sampled request) to the ServeEngine and streams tokens as
+they are generated.
 
     PYTHONPATH=src python examples/serve_batch.py --arch qwen3-moe-30b-a3b
 """
 
 import argparse
 
-from repro.launch.serve import main as serve_main
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.serve import (EngineConfig, Request, SamplingParams, ServeEngine)
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--gen", type=int, default=8)
     args = ap.parse_args()
-    serve_main(["--arch", args.arch, "--smoke", "--batch",
-                str(args.batch), "--prompt-len", "24", "--gen", "8"])
+
+    arch = get_arch(args.arch)
+    model = arch.make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+
+    requests = [
+        Request(tokens=rng.randint(0, model.cfg.vocab, size=n).tolist(),
+                max_new_tokens=args.gen,
+                eos_id=3 if i == 1 else None,
+                sampling=(SamplingParams(temperature=0.8, top_k=40, seed=7)
+                          if i == 2 else SamplingParams()))
+        for i, n in enumerate((24, 8, 16, 24))]
+
+    engine = ServeEngine(
+        model, params,
+        EngineConfig(max_batch=args.max_batch, max_seq=24 + args.gen),
+        frontend=arch.frontend)
+    for req in requests:
+        engine.submit(req, on_token=lambda rid, tok, i:
+                      print(f"  req {rid} token[{i}] = {tok}"))
+    while engine.has_work:
+        for comp in engine.step():
+            print(f"done: req {comp.request_id} ({comp.finish_reason}) "
+                  f"-> {comp.tokens}")
+
+    st = engine.stats
+    print(f"\n{st.requests_completed} requests, "
+          f"{st.generated_tokens} tokens, "
+          f"{st.decode_tokens_per_s:.1f} decode tok/s, "
+          f"slot utilization {st.slot_utilization:.2f}")

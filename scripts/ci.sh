@@ -4,5 +4,16 @@
 # to keep tier-1 fast — run them with `make test-all` (or plain pytest).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-    -m "not slow" "$@"
+if [ "$#" -gt 0 ]; then
+    # explicit args (paths / -k filters): single invocation, as before
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        -m "not slow" "$@"
+else
+    # serve engine first: the continuous-batching equivalence/slot-reuse
+    # guarantees are the newest invariants and the cheapest to break
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        -m "not slow" tests/test_serve_engine.py tests/test_serve.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        -m "not slow" --ignore=tests/test_serve_engine.py \
+        --ignore=tests/test_serve.py
+fi

@@ -29,6 +29,8 @@ Custom strategy::
 
 from ..core.sync_policies import (Int8EFSync, MeanSync, OuterOptSync,
                                   SyncPolicy, resolve_policy)
+from ..serve import (Completion, EngineConfig, EngineStats, Request,
+                     SamplingParams, ServeEngine)
 from .registry import (available_strategies, get_strategy,
                        register_strategy, unregister_strategy)
 from .session import InferenceSession, JobConfig, Session
@@ -40,4 +42,7 @@ __all__ = [
     "unregister_strategy", "available_strategies",
     "SyncPolicy", "MeanSync", "Int8EFSync", "OuterOptSync",
     "resolve_policy",
+    # serving (re-exported from repro.serve)
+    "ServeEngine", "EngineConfig", "Request", "SamplingParams",
+    "Completion", "EngineStats",
 ]

@@ -11,7 +11,7 @@ duplicate::
     sess.fit(100)                      # profile -> plan -> train
     sess.replan(bandwidth=1e8)         # link drifted: re-solve + hot-swap
     sess.fit(100)                      # continue on the new schedule
-    handle = sess.serve()              # inference on the trained replica
+    engine = sess.serve()              # continuous-batching ServeEngine
     sess.simulate("churn")             # replay the plan through SimNet
 
 Everything is lazy: ``.plan`` / ``.profile()`` work without ever building
@@ -25,11 +25,11 @@ the phase-specialized steps mid-run.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from ..checkpoint import CheckpointManager
 from ..core.partial_sync import worker_unstack
@@ -40,7 +40,7 @@ from ..optim import make_optimizer
 from ..runtime import (Runner, RunnerConfig, StepConfig, TrainState,
                        init_train_state)
 from ..runtime.runner import reshard_train_state
-from ..runtime.step import make_decode_step, make_prefill_step
+from ..serve import EngineConfig, ServeEngine
 from .registry import get_strategy
 
 __all__ = ["JobConfig", "Session", "InferenceSession"]
@@ -103,6 +103,7 @@ class Session:
         self._runner: Runner | None = None
         self._state: TrainState | None = None
         self._step = 0
+        self._engines: dict[tuple, ServeEngine] = {}
 
     # ------------------------------------------------------------ lazy parts
     @property
@@ -141,11 +142,21 @@ class Session:
 
     @property
     def step_config(self) -> StepConfig:
+        if self.cfg.compress is not None or self.cfg.outer:
+            warnings.warn(
+                "JobConfig.compress/outer are deprecated; pick the policy "
+                "through the algo registry instead (algo='dreamddp-int8' "
+                "for int8+EF syncs, or a strategy whose sync_policy() "
+                "returns OuterOptSync for the DiLoCo outer step)",
+                DeprecationWarning, stacklevel=2)
         base = StepConfig(n_microbatches=self.cfg.n_microbatches,
                           compress=self.cfg.compress, outer=self.cfg.outer,
                           track_divergence=self.cfg.track_divergence)
+        # once the strategy has resolved a policy the legacy flags have
+        # done their job — stop threading them through the step config
         return dataclasses.replace(
-            base, policy=self.strategy.sync_policy(base))
+            base, policy=self.strategy.sync_policy(base), compress=None,
+            outer=False)
 
     @property
     def state(self) -> TrainState:
@@ -318,39 +329,75 @@ class Session:
         return SimReport(scenario=scenario.name, trace=trace, plans=plans)
 
     # ------------------------------------------------------------- serving
-    def serve(self, *, worker: int = 0) -> "InferenceSession":
-        """The inference path: one synchronized replica, jitted steps."""
-        model = self.model
+    def serve(self, *, worker: int = 0,
+              config: EngineConfig | None = None) -> ServeEngine:
+        """The inference path: a continuous-batching :class:`ServeEngine`
+        over one synchronized replica.
+
+        Engines are memoized per ``(frontend, engine config, worker)``:
+        repeated ``serve()`` calls after more ``fit()`` reuse the compiled
+        prefill/decode executables and the KV arena, only swapping in the
+        fresh params — the old per-call re-jit is gone.
+        """
+        model = self.model                  # also resolves self._frontend
         if self._state is not None:
             params = worker_unstack(self._state.params, worker)
         else:
             params = model.init(jax.random.PRNGKey(self.cfg.seed))
-        prefill = jax.jit(make_prefill_step(model,
-                                            with_frontend=self._frontend))
-        decode = jax.jit(make_decode_step(model))
-        return InferenceSession(model, params, prefill, decode)
+        cfg = config or EngineConfig()
+        key = (self._frontend, cfg, worker)
+        engine = self._engines.get(key)
+        if engine is None:
+            engine = ServeEngine(model, params, cfg,
+                                 frontend=self._frontend)
+            self._engines[key] = engine
+        else:
+            if engine.has_work:
+                raise RuntimeError(
+                    "serve() would reset an engine with queued/in-flight "
+                    "requests; drain() the previous handle first (or "
+                    "serve() with a different EngineConfig)")
+            engine.reset(params=params)
+        return engine
 
 
 class InferenceSession:
-    """Greedy batched decoding over a single (synchronized) replica."""
+    """Deprecated shim over :class:`~repro.serve.ServeEngine`.
 
-    def __init__(self, model, params, prefill, decode):
+    The old ad-hoc greedy loop is gone; this keeps the ``generate(tokens,
+    max_new_tokens, *extra)`` call signature alive by delegating to an
+    engine (array convenience mode: greedy, no EOS exit — identical
+    semantics, same tokens).  New code should use ``Session.serve()``
+    directly, which returns the engine.
+    """
+
+    def __init__(self, model, params, *, frontend: str | None = None,
+                 config: EngineConfig | None = None):
+        warnings.warn(
+            "InferenceSession is deprecated: Session.serve() now returns "
+            "a repro.serve.ServeEngine (continuous batching, EOS exit, "
+            "sampling, stats) — use it directly",
+            DeprecationWarning, stacklevel=2)
         self.model = model
         self.params = params
-        self._prefill = prefill
-        self._decode = decode
+        self.frontend = frontend
+        self._config = config
+        self.engine: ServeEngine | None = None
 
     def generate(self, tokens: jax.Array, max_new_tokens: int = 16,
                  *extra) -> jax.Array:
         """Prefill ``tokens`` ``[B, S]`` then decode greedily."""
         b, s = tokens.shape
-        if max_new_tokens <= 0:
-            return jnp.zeros((b, 0), jnp.int32)
-        cache = self.model.init_cache(b, s + max_new_tokens)
-        logits, cache = self._prefill(self.params, tokens, cache, *extra)
-        out = [jnp.argmax(logits, -1).astype(jnp.int32)]
-        for i in range(max_new_tokens - 1):
-            pos = jnp.full((b,), s + i, jnp.int32)
-            logits, cache = self._decode(self.params, cache, out[-1], pos)
-            out.append(jnp.argmax(logits, -1).astype(jnp.int32))
-        return jnp.concatenate(out, axis=1)
+        prefix = extra[0].shape[1] if (self.frontend == "vision"
+                                       and extra) else 0
+        need = prefix + s + max(max_new_tokens, 0)
+        # the old loop sized its cache per call; grow max_seq to match so
+        # any request the old loop handled still works
+        if self.engine is None or need > self.engine.config.max_seq:
+            base = self._config or EngineConfig()
+            cfg = dataclasses.replace(base,
+                                      max_seq=max(base.max_seq, need))
+            self.engine = ServeEngine(self.model, self.params, cfg,
+                                      frontend=self.frontend)
+        self.engine.reset(params=self.params)
+        return self.engine.generate(tokens, max_new_tokens, *extra)

@@ -1,80 +1,125 @@
-"""Batched serving driver: prefill a prompt batch, decode greedily.
+"""Serving driver: continuous-batching engine over a reduced config.
 
-Runs a reduced config for real on CPU; the full configs are exercised by
-the dry-run cells (prefill_32k / decode_32k / long_500k).
+Runs the :class:`repro.serve.ServeEngine` for real on CPU; the full
+configs are exercised by the dry-run cells (prefill_32k / decode_32k /
+long_500k).
 
-Usage::
+Synthetic workload (uniform batch, like the old driver)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+Trace-driven mode — ``--requests`` takes a JSON file with a list of
+request dicts (``tokens`` or ``prompt_len``, ``max_new_tokens``, optional
+``eos_id`` / ``temperature`` / ``top_k`` / ``seed``)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --requests trace.json --max-batch 4
+
+Both modes print the engine's :class:`~repro.serve.EngineStats` report.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
+import numpy as np
+
+
+def _load_trace(path: str, vocab: int, rng) -> list[dict]:
+    with open(path) as f:
+        trace = json.load(f)
+    if not isinstance(trace, list):
+        raise ValueError(f"{path}: expected a JSON list of request dicts")
+    for i, r in enumerate(trace):
+        if "tokens" not in r:
+            n = int(r.get("prompt_len", 8))
+            r["tokens"] = rng.randint(0, vocab, size=n).tolist()
+        _ = r.setdefault("max_new_tokens", 16)
+    return trace
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="synthetic mode: number of requests")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", default=None,
+                    help="JSON trace file (list of request dicts)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="engine slot count (default: --batch)")
+    ap.add_argument("--max-seq", type=int, default=None)
+    ap.add_argument("--decode-block", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
     args = ap.parse_args(argv)
 
     from ..configs import get_arch
-    from ..runtime.step import make_decode_step, make_prefill_step
+    from ..serve import (EngineConfig, Request, SamplingParams, ServeEngine)
 
     arch = get_arch(args.arch)
     model = arch.make_smoke() if args.smoke else arch.make_model()
     cfg = model.cfg
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    b, s, gen = args.batch, args.prompt_len, args.gen
-    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
-                                cfg.vocab)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
 
-    prefill = jax.jit(make_prefill_step(model,
-                                        with_frontend=arch.frontend))
-    decode = jax.jit(make_decode_step(model))
+    if args.requests:
+        trace = _load_trace(args.requests, cfg.vocab, rng)
+    else:
+        trace = [{"tokens": rng.randint(0, cfg.vocab,
+                                        size=args.prompt_len).tolist(),
+                  "max_new_tokens": args.gen}
+                 for _ in range(args.batch)]
 
-    cache = model.init_cache(b, s + gen)
-    extra = ()
-    if arch.frontend == "audio":
-        extra = (jax.random.normal(key, (b, cfg.n_frames, cfg.d_model)),)
-    elif arch.frontend == "vision":
-        extra = (jax.random.normal(key, (b, 8, cfg.d_model)),)
+    def req_extra(r):
+        if arch.frontend == "audio":
+            return (np.asarray(rng.standard_normal(
+                (cfg.n_frames, cfg.d_model)), np.float32),)
+        if arch.frontend == "vision":
+            return (np.asarray(rng.standard_normal(
+                (8, cfg.d_model)), np.float32),)
+        return ()
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, tokens, cache, *extra)
-    logits = jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    requests = [
+        Request(tokens=r["tokens"],
+                max_new_tokens=int(r["max_new_tokens"]),
+                eos_id=r.get("eos_id"),
+                sampling=SamplingParams(
+                    temperature=float(r.get("temperature", 0.0)),
+                    top_k=int(r.get("top_k", 0)),
+                    seed=int(r.get("seed", 0))),
+                extra=req_extra(r))
+        for r in trace]
 
-    # Block per decode step: each measured section must cover exactly one
-    # token's dispatch+compute, otherwise async dispatch skews ms/tok
-    # (the old loop only blocked on the final token).
-    tok_times = []
-    for i in range(gen - 1):
-        t0 = time.perf_counter()
-        pos = jnp.full((b,), s + i, jnp.int32)
-        logits, cache = decode(params, cache, out[-1], pos)
-        out.append(jax.block_until_ready(
-            jnp.argmax(logits, -1).astype(jnp.int32)))
-        tok_times.append(time.perf_counter() - t0)
-    t_decode = sum(tok_times)
+    prefix = 8 if arch.frontend == "vision" else 0
+    need = max(prefix + len(r.tokens) + r.max_new_tokens
+               for r in requests)
+    engine = ServeEngine(
+        model, params,
+        EngineConfig(max_batch=args.max_batch or args.batch,
+                     max_seq=args.max_seq or need,
+                     decode_block=args.decode_block,
+                     prefill_chunk=args.prefill_chunk),
+        frontend=arch.frontend)
 
-    gen_tokens = jnp.concatenate(out, axis=1)
-    ms_tok = t_decode / max(len(tok_times), 1) * 1e3
-    print(f"arch={args.arch} prefill[{b}x{s}]={t_prefill * 1e3:.1f}ms  "
-          f"decode {gen - 1} steps={t_decode * 1e3:.1f}ms "
-          f"({ms_tok:.1f} ms/tok)")
-    print("generated:", gen_tokens[0, :12].tolist())
+    completions = engine.generate(requests)
+    st = engine.stats
+    n_dec = st.decode_tokens
+    ms_tok = (st.decode_time_s / n_dec * 1e3) if n_dec else 0.0
+    print(f"arch={args.arch} requests={st.requests_completed} "
+          f"prompt_tokens={st.prompt_tokens} "
+          f"generated={st.generated_tokens}")
+    print(f"prefill={st.prefill_time_s * 1e3:.1f}ms  "
+          f"decode {n_dec} steps={st.decode_time_s * 1e3:.1f}ms "
+          f"({ms_tok:.1f} ms/tok, {st.decode_tokens_per_s:.1f} tok/s)")
+    print(f"ttft mean={st.mean_ttft_s * 1e3:.1f}ms  "
+          f"latency mean={st.mean_latency_s * 1e3:.1f}ms  "
+          f"slot_util={st.slot_utilization:.2f}")
+    print("generated:", completions[0].tokens[:12])
     return 0
 
 

@@ -49,9 +49,12 @@ def main(argv=None) -> int:
     ap.add_argument("--bandwidth", type=float, default=1e9)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--compress", default=None, choices=(None, "int8_ef"))
+    ap.add_argument("--compress", default=None, choices=(None, "int8_ef"),
+                    help="DEPRECATED: use --algo dreamddp-int8")
     ap.add_argument("--outer", action="store_true",
-                    help="DiLoCo-style outer optimizer (beyond-paper)")
+                    help="DiLoCo-style outer optimizer (beyond-paper; "
+                         "DEPRECATED: register a strategy whose "
+                         "sync_policy() returns OuterOptSync)")
     ap.add_argument("--track-divergence", action="store_true")
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)

@@ -168,6 +168,10 @@ def ssd_decode_step(x: jax.Array, dt: jax.Array, a_log: jax.Array,
 # ---------------------------------------------------------------------------
 
 class Mamba2LM:
+    # recurrent state folds every prefill step in (pad steps included), so
+    # right-padded (chunked) prefill would corrupt it — exact prefill only
+    kv_position_indexed = False
+
     def __init__(self, cfg: Mamba2Config):
         self.cfg = cfg
 

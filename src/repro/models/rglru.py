@@ -131,6 +131,10 @@ def _rg_lru_step(p, x, h):
 # ---------------------------------------------------------------------------
 
 class RGLM:
+    # LRU states and attention ring buffers fold pad steps in, so
+    # right-padded (chunked) prefill would corrupt them — exact prefill only
+    kv_position_indexed = False
+
     def __init__(self, cfg: RGConfig):
         self.cfg = cfg
 

@@ -86,6 +86,10 @@ class LMConfig:
 class DecoderLM:
     """Functional decoder LM (init / apply / loss / prefill / decode)."""
 
+    # cache entries are addressed by position and masked by valid length,
+    # so right-padded (chunked) prefill cannot leak into decode
+    kv_position_indexed = True
+
     def __init__(self, cfg: LMConfig):
         self.cfg = cfg
 

@@ -60,6 +60,10 @@ def _sinusoid(length: int, d: int) -> jax.Array:
 
 
 class WhisperModel:
+    # decoder self-KV is position-addressed + length-masked: right-padded
+    # (chunked) prefill cannot leak into decode
+    kv_position_indexed = True
+
     def __init__(self, cfg: WhisperConfig):
         self.cfg = cfg
 

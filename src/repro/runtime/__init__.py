@@ -1,8 +1,11 @@
 from .runner import Runner, RunnerConfig
 from .step import (StepConfig, TrainState, init_train_state,
                    make_decode_step, make_phase_steps, make_prefill_step,
-                   make_train_step)
+                   make_slot_decode_step, make_slot_prefill_step,
+                   make_slot_refeed_step, make_train_step)
 
 __all__ = ["Runner", "RunnerConfig", "StepConfig", "TrainState",
            "init_train_state", "make_decode_step", "make_phase_steps",
-           "make_prefill_step", "make_train_step"]
+           "make_prefill_step", "make_slot_decode_step",
+           "make_slot_prefill_step", "make_slot_refeed_step",
+           "make_train_step"]

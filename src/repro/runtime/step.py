@@ -35,7 +35,8 @@ from ..optim.optimizers import Optimizer
 
 __all__ = ["TrainState", "StepConfig", "init_train_state",
            "make_train_step", "make_phase_steps", "make_prefill_step",
-           "make_decode_step"]
+           "make_decode_step", "make_slot_prefill_step",
+           "make_slot_refeed_step", "make_slot_decode_step"]
 
 PyTree = Any
 
@@ -164,3 +165,93 @@ def make_decode_step(model):
     def decode(params, cache, token, pos):
         return model.decode_step(params, cache, token, pos)
     return decode
+
+
+# ---------------------------------------------------------------------------
+# Slot-pooled serve steps (continuous batching; see repro.serve)
+# ---------------------------------------------------------------------------
+#
+# Cache leaves are [layers, slots, ...] across every model family, so a
+# "slot" is one lane of axis 1.  The legacy decode path shares one write
+# position across the whole batch (``write_pos[0]``); these variants vmap
+# the model's own single-sequence step over the slot axis instead, which
+# gives every slot an independent write position and sequence length — the
+# property continuous batching needs — without touching the models.
+
+_SLOT_AXIS = 1
+
+
+def _slot_view(arena, slot):
+    """One-lane view ``[layers, 1, ...]`` of the arena at ``slot`` (traced
+    index: no recompile per slot)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=_SLOT_AXIS),
+        arena)
+
+
+def _slot_write(arena, new, slot):
+    """Scatter a one-lane cache back into the arena at ``slot``."""
+    return jax.tree.map(
+        lambda a, n: jax.lax.dynamic_update_slice_in_dim(
+            a, n.astype(a.dtype), slot, axis=_SLOT_AXIS), arena, new)
+
+
+def make_slot_prefill_step(model, *, with_frontend: str | None = None):
+    """Prefill one request into arena slot ``slot``.
+
+    ``tokens`` is ``[1, S]``; compiles once per distinct prompt length
+    (``slot`` is a traced scalar).  Returns (last-token logits ``[1, 1,
+    V]``, updated arena).
+    """
+    prefill = make_prefill_step(model, with_frontend=with_frontend)
+
+    def slot_prefill(params, arena, tokens, slot, *extra):
+        logits, new = prefill(params, tokens, _slot_view(arena, slot),
+                              *extra)
+        return logits, _slot_write(arena, new, slot)
+
+    return slot_prefill
+
+
+def make_slot_refeed_step(model):
+    """Re-decode the last prompt token of one slot at position ``pos``.
+
+    Used by chunked prefill: after a right-padded prefill the returned
+    logits belong to a pad position, so the true last-token logits are
+    recovered by one decode step (which rewrites the identical KV entry at
+    ``pos`` and attends the same causal window the unpadded prefill would
+    have).
+    """
+    def refeed(params, arena, slot, token, pos):
+        logits, new = model.decode_step(params, _slot_view(arena, slot),
+                                        token[None, None], pos[None])
+        return logits, _slot_write(arena, new, slot)
+
+    return refeed
+
+
+def make_slot_decode_step(model):
+    """Batched one-token decode with PER-SLOT write positions.
+
+    ``tokens [S]`` / ``pos [S]`` -> (logits ``[S, V]``, arena).  The
+    model's ``decode_step`` is vmapped over the slot axis, so each lane
+    advances at its own position (and recurrent families update each
+    lane's state independently).
+    """
+    def one(cache_i, token, pos, params):
+        # vmap strips the slot axis; reinsert a singleton batch axis for the
+        # model's [layers, batch, ...] cache contract and strip it again on
+        # the way out (out_axes restores the slot axis).
+        cache_i = jax.tree.map(lambda a: a[:, None], cache_i)
+        logits, new = model.decode_step(params, cache_i, token[None, None],
+                                        pos[None])
+        return logits[0, 0], jax.tree.map(lambda a: a[:, 0], new)
+
+    def slot_decode(params, arena, tokens, pos):
+        axes = jax.tree.map(lambda _: _SLOT_AXIS, arena)
+        logits, new_arena = jax.vmap(
+            one, in_axes=(axes, 0, 0, None),
+            out_axes=(0, axes))(arena, tokens, pos, params)
+        return logits, new_arena
+
+    return slot_decode

@@ -1,0 +1,41 @@
+"""repro.serve — continuous-batching inference engine.
+
+The serving counterpart of the :mod:`repro.api` training redesign:
+requests, sampling, and engine shapes are **data**; the scheduler is an
+object; the decode hot path is one fused slot-wide executable.
+
+Quick start::
+
+    from repro.api import JobConfig, Session
+    from repro.serve import EngineConfig, Request, SamplingParams
+
+    sess = Session(JobConfig(arch="qwen3-1.7b")).fit(100)
+    engine = sess.serve(config=EngineConfig(max_batch=8, max_seq=256))
+    comps = engine.generate([
+        Request(tokens=[1, 2, 3], max_new_tokens=32, eos_id=7),
+        Request(tokens=[4, 5], max_new_tokens=8,
+                sampling=SamplingParams(temperature=0.8, top_k=40,
+                                        seed=13)),
+    ])
+    print(comps[0].tokens, engine.stats.decode_tokens_per_s)
+
+Streaming / incremental::
+
+    engine.submit(req, on_token=lambda rid, tok, i: print(rid, tok))
+    while engine.has_work:
+        engine.step()
+"""
+
+from .cache import CachePool
+from .config import EngineConfig
+from .engine import ServeEngine
+from .naive import NaiveLoop, naive_generate
+from .sampling import make_token_sampler
+from .scheduler import RequestState, Scheduler
+from .types import Completion, EngineStats, Request, SamplingParams
+
+__all__ = [
+    "Request", "SamplingParams", "Completion", "EngineStats",
+    "EngineConfig", "ServeEngine", "CachePool", "Scheduler",
+    "RequestState", "NaiveLoop", "naive_generate", "make_token_sampler",
+]

@@ -1,0 +1,62 @@
+"""CachePool — slot-pooled KV/state arena with free-list allocation.
+
+The arena is the model's own cache pytree, allocated **once** for
+``n_slots`` lanes (every model family puts the batch axis at axis 1 of
+each leaf, behind the stacked layer axis).  Requests are admitted into a
+free slot and release it when they finish; the arrays never change shape,
+so admission/retirement never reallocates device memory and never
+invalidates a compiled executable.
+
+Stale contents in a freed slot are harmless by construction: prefill
+rewrites positions ``[0, prompt_len)`` wholesale (recurrent families
+rebuild their state from scratch), and attention masks every position
+beyond the slot's write frontier (``kv_valid_len``), so a reused slot can
+never read the previous tenant's KV.  The slot-reuse tests pin this.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["CachePool"]
+
+PyTree = Any
+
+SLOT_AXIS = 1  # cache leaves are [layers, batch, ...] across all families
+
+
+class CachePool:
+    """Fixed arena of ``n_slots`` cache lanes + a host-side free list."""
+
+    def __init__(self, model, n_slots: int, max_seq: int):
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.arena: PyTree = model.init_cache(n_slots, max_seq)
+        for leaf in jax.tree_util.tree_leaves(self.arena):
+            if leaf.ndim <= SLOT_AXIS or leaf.shape[SLOT_AXIS] != n_slots:
+                raise ValueError(
+                    f"cache leaf {leaf.shape} does not carry the slot axis "
+                    f"at axis {SLOT_AXIS}; CachePool requires "
+                    f"[layers, slots, ...] cache layouts")
+        self._free: list[int] = list(range(n_slots - 1, -1, -1))
+
+    # ------------------------------------------------------------ free list
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int | None:
+        """Pop a free slot id, or None when the arena is full."""
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        if slot in self._free or not 0 <= slot < self.n_slots:
+            raise ValueError(f"double free / bad slot {slot}")
+        self._free.append(slot)
+
+    def reset(self) -> None:
+        """Release every slot (arena contents are left as-is: stale data
+        is unreadable by construction, see module docstring)."""
+        self._free = list(range(self.n_slots - 1, -1, -1))

@@ -1,0 +1,70 @@
+"""EngineConfig — the (hashable) shape contract of a ``ServeEngine``.
+
+Everything that determines a compiled executable's shapes lives here, so
+one config = one warm set of jitted steps: the KV arena is ``[layers,
+n_slots, max_seq, ...]``, the fused decode block always runs over all
+``n_slots`` lanes, and prefill compiles once per distinct prompt length
+(or once per ``prefill_chunk`` bucket when chunked prefill is enabled).
+Admitting or finishing a request never changes a shape, so it never
+recompiles and never reallocates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["EngineConfig"]
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static serving-engine shape/scheduling parameters.
+
+    ``max_batch``
+        Cap on concurrently *running* requests (scheduler admission limit).
+    ``max_seq``
+        Per-slot cache capacity; every request needs
+        ``prefix + len(prompt) + max_new_tokens <= max_seq`` (``prefix`` =
+        vision patch count for VLM frontends, else 0).
+    ``n_slots``
+        KV-cache slots in the arena (``None`` = ``max_batch``).  The fused
+        decode step is compiled for exactly this width.
+    ``prefill_chunk``
+        If set, prompt lengths are right-padded up to a multiple of this
+        value so at most ``max_seq / prefill_chunk`` prefill executables
+        ever exist; the true last-prompt-token logits are recovered with
+        one extra decode step.  Only valid for position-indexed
+        (attention-KV) caches — recurrent-state families (mamba2,
+        recurrentgemma) fold padding steps into their state, so the
+        engine rejects the option for models without
+        ``kv_position_indexed`` (use the default, ``None``).
+    ``decode_block``
+        Decode ticks fused into one jitted ``lax.while_loop`` between
+        scheduler interventions (admission happens at block boundaries).
+        The block exits early once every lane is inactive.
+    ``max_prefills_per_tick``
+        Admission budget per scheduler tick (``None`` = fill every free
+        slot).  Lower values keep decode latency smooth under a prefill
+        backlog ("decode-priority" interleave).
+    """
+
+    max_batch: int = 8
+    max_seq: int = 256
+    n_slots: int | None = None
+    prefill_chunk: int | None = None
+    decode_block: int = 8
+    max_prefills_per_tick: int | None = None
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.n_slots is not None and self.n_slots < self.max_batch:
+            raise ValueError("n_slots must be >= max_batch")
+        if self.decode_block < 1:
+            raise ValueError("decode_block must be >= 1")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+
+    @property
+    def slots(self) -> int:
+        return self.n_slots if self.n_slots is not None else self.max_batch

@@ -1,0 +1,416 @@
+"""ServeEngine — continuous-batching inference over a slot-pooled cache.
+
+The engine replaces the ad-hoc per-batch greedy loop with a declarative
+pipeline: requests are **data** (:class:`~repro.serve.types.Request`), the
+admission policy is an object (:class:`~repro.serve.scheduler.Scheduler`),
+and the decode hot path is one fused, jitted ``lax.while_loop`` over the
+whole slot set with per-slot EOS/length masking — finished lanes stop
+emitting and the block exits early once every lane is done.
+
+Shapes are fixed by :class:`~repro.serve.config.EngineConfig`: admitting a
+request prefills one arena slot (compiled once per prompt length, or per
+``prefill_chunk`` bucket), and every decode tick runs the same
+``[n_slots]``-wide executable regardless of how many requests are in
+flight — admission/retirement never recompiles and never reallocates.
+
+Two entry points::
+
+    engine.generate(requests)              # synchronous, list[Completion]
+    rid = engine.submit(req, on_token=cb)  # incremental / streaming
+    while engine.has_work:
+        engine.step()                      # one admission + decode tick
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime.step import (make_slot_decode_step, make_slot_prefill_step,
+                            make_slot_refeed_step)
+from .cache import CachePool
+from .config import EngineConfig
+from .sampling import make_token_sampler
+from .scheduler import RequestState, Scheduler
+from .types import Completion, EngineStats, Request, SamplingParams
+
+__all__ = ["ServeEngine"]
+
+PyTree = Any
+
+
+class _SlotState(NamedTuple):
+    """Per-slot decode state, all arrays ``[n_slots]`` (``key``: ``[n_slots,
+    2]``).  ``pos`` is the next KV write index; ``token`` the last sampled
+    token (fed to the next decode tick)."""
+
+    token: jax.Array
+    pos: jax.Array
+    ngen: jax.Array
+    active: jax.Array
+    temp: jax.Array
+    top_k: jax.Array
+    key: jax.Array
+    eos: jax.Array
+    max_gen: jax.Array
+
+
+def _init_slot_state(n_slots: int) -> _SlotState:
+    i32 = jnp.int32
+    return _SlotState(
+        token=jnp.zeros((n_slots,), i32),
+        pos=jnp.zeros((n_slots,), i32),
+        ngen=jnp.zeros((n_slots,), i32),
+        active=jnp.zeros((n_slots,), bool),
+        temp=jnp.zeros((n_slots,), jnp.float32),
+        top_k=jnp.zeros((n_slots,), i32),
+        key=jnp.zeros((n_slots, 2), jnp.uint32),
+        eos=jnp.full((n_slots,), -1, i32),
+        max_gen=jnp.zeros((n_slots,), i32),
+    )
+
+
+def _make_decode_block(model, vocab: int, n_steps: int):
+    """Fused multi-token decode: ``n_steps`` slot-wide ticks in one
+    ``lax.while_loop``, exiting early when no lane is active.
+
+    Inactive lanes are masked, not skipped: their emitted token is ``-1``,
+    their ``pos``/``ngen``/``token`` freeze, and whatever their decode
+    lane writes into the arena lands beyond any active frontier (masked by
+    ``kv_valid_len`` / overwritten by the next prefill), so it is
+    unobservable.
+    """
+    slot_decode = make_slot_decode_step(model)
+    sampler = make_token_sampler(vocab)
+
+    def block(params, arena, st: _SlotState):
+        n_slots = st.token.shape[0]
+        out0 = jnp.full((n_steps, n_slots), -1, jnp.int32)
+
+        def cond(carry):
+            i, _, s, _ = carry
+            return (i < n_steps) & jnp.any(s.active)
+
+        def sampled(s, logits):
+            split = jax.vmap(jax.random.split)(s.key)        # [S, 2, 2]
+            return (sampler(logits, s.temp, s.top_k, split[:, 0]),
+                    split[:, 1])
+
+        def greedy(s, logits):
+            return jnp.argmax(logits, -1).astype(jnp.int32), s.key
+
+        def body(carry):
+            i, arena, s, out = carry
+            logits, arena = slot_decode(params, arena, s.token, s.pos)
+            # greedy fast path: the top-k sort + categorical draw is ~10x
+            # an argmax, so skip it unless some active lane samples.  A
+            # sampling lane's key still splits exactly once per tick it
+            # is active for (it forces the branch itself), so its stream
+            # stays batch-independent.
+            tok, key_next = jax.lax.cond(
+                jnp.any(s.active & (s.temp > 0.0)), sampled, greedy,
+                s, logits)
+            was = s.active
+            emitted = jnp.where(was, tok, -1)
+            out = jax.lax.dynamic_update_index_in_dim(out, emitted, i, 0)
+            ngen = s.ngen + was.astype(jnp.int32)
+            active = was & (tok != s.eos) & (ngen < s.max_gen)
+            new = _SlotState(
+                token=jnp.where(was, tok, s.token),
+                pos=s.pos + was.astype(jnp.int32),
+                ngen=ngen, active=active, temp=s.temp, top_k=s.top_k,
+                key=jnp.where(was[:, None], key_next, s.key),
+                eos=s.eos, max_gen=s.max_gen)
+            return i + 1, arena, new, out
+
+        i, arena, st, out = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), arena, st, out0))
+        return arena, st, out, i
+
+    return block
+
+
+class ServeEngine:
+    """Continuous-batching generation engine for one model replica."""
+
+    def __init__(self, model, params: PyTree,
+                 config: EngineConfig | None = None, *,
+                 frontend: str | None = None):
+        self.model = model
+        self.params = params
+        self.config = config or EngineConfig()
+        self.frontend = frontend
+        vocab = model.cfg.vocab
+        if self.config.prefill_chunk and \
+                not getattr(model, "kv_position_indexed", False):
+            raise ValueError(
+                "prefill_chunk requires a position-indexed KV cache; "
+                f"{type(model).__name__} carries recurrent state that "
+                "right-padded prefill would corrupt — use exact prefill "
+                "(prefill_chunk=None)")
+
+        self.pool = CachePool(model, self.config.slots, self.config.max_seq)
+        self.scheduler = Scheduler(
+            self.pool, max_batch=self.config.max_batch,
+            max_prefills_per_tick=self.config.max_prefills_per_tick)
+        self._state = _init_slot_state(self.config.slots)
+        self._stats = EngineStats()
+        self._completed: list[Completion] = []
+
+        # compiled once per engine; prefill additionally caches one
+        # executable per distinct prompt length (or chunk bucket)
+        self._slot_prefill = jax.jit(
+            make_slot_prefill_step(model, with_frontend=frontend))
+        self._refeed = jax.jit(make_slot_refeed_step(model))
+        self._decode_block = jax.jit(
+            _make_decode_block(model, vocab, self.config.decode_block))
+        sampler = make_token_sampler(vocab)
+
+        def first_sample(logits, temp, top_k, seed):
+            keys = jax.random.split(jax.random.PRNGKey(seed))
+            tok = sampler(logits[:, 0], temp[None], top_k[None],
+                          keys[:1])[0]
+            return tok, keys[1]
+
+        self._first_sample = jax.jit(first_sample)
+
+        def admit_update(st: _SlotState, slot, token, pos, active, temp,
+                         top_k, key, eos, max_gen):
+            return _SlotState(
+                token=st.token.at[slot].set(token),
+                pos=st.pos.at[slot].set(pos),
+                ngen=st.ngen.at[slot].set(1),
+                active=st.active.at[slot].set(active),
+                temp=st.temp.at[slot].set(temp),
+                top_k=st.top_k.at[slot].set(top_k),
+                key=st.key.at[slot].set(key),
+                eos=st.eos.at[slot].set(eos),
+                max_gen=st.max_gen.at[slot].set(max_gen))
+
+        self._admit_update = jax.jit(admit_update)
+
+    # ----------------------------------------------------------- submission
+    def _prefix_len(self, req: Request) -> int:
+        """Cache positions consumed before the prompt (vision patches are
+        prepended to the decoder sequence; audio frames cache cross-KV)."""
+        if self.frontend == "vision" and req.extra:
+            return int(np.shape(req.extra[0])[0])
+        return 0
+
+    def submit(self, request: Request,
+               on_token: Callable | None = None) -> int:
+        """Queue a request; returns its id.  ``on_token(request_id, token,
+        index)`` streams every generated token as it is harvested."""
+        s = len(request.tokens)
+        if not s:
+            raise ValueError("empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        padded = s
+        if self.config.prefill_chunk:
+            chunk = self.config.prefill_chunk
+            padded = s + (-s) % chunk
+        need = self._prefix_len(request) \
+            + max(s + request.max_new_tokens, padded)
+        if need > self.config.max_seq:
+            raise ValueError(
+                f"request {request.request_id} needs {need} cache slots "
+                f"(> max_seq={self.config.max_seq}); raise "
+                f"EngineConfig.max_seq or shorten the request")
+        rs = RequestState(request, on_token=on_token,
+                          submit_t=time.perf_counter())
+        self.scheduler.submit(rs)
+        return request.request_id
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    @property
+    def stats(self) -> EngineStats:
+        return self._stats
+
+    def compile_stats(self) -> dict[str, int]:
+        """Live jit-cache sizes — the recompile detector the slot-reuse
+        tests assert on (admission into a freed slot must not miss)."""
+        out = {}
+        for name, fn in (("prefill", self._slot_prefill),
+                         ("refeed", self._refeed),
+                         ("decode_block", self._decode_block),
+                         ("first_sample", self._first_sample),
+                         ("admit_update", self._admit_update)):
+            size = getattr(fn, "_cache_size", None)
+            out[name] = size() if callable(size) else -1
+        return out
+
+    # ------------------------------------------------------------ admission
+    def _admit(self, slot: int, rs: RequestState,
+               finished: list[Completion]) -> None:
+        req = rs.request
+        t0 = time.perf_counter()
+        tokens = jnp.asarray(req.tokens, jnp.int32)[None]
+        extra = tuple(jnp.asarray(a)[None] for a in req.extra)
+        s = tokens.shape[1]
+        prefix = self._prefix_len(req)
+
+        chunk = self.config.prefill_chunk
+        pad = (-s) % chunk if chunk else 0
+        if pad:
+            padded = jnp.pad(tokens, ((0, 0), (0, pad)))
+            logits, arena = self._slot_prefill(
+                self.params, self.pool.arena, padded, jnp.int32(slot),
+                *extra)
+            # recover the true last-prompt-token logits (see EngineConfig)
+            logits, arena = self._refeed(
+                self.params, arena, jnp.int32(slot),
+                jnp.int32(req.tokens[-1]), jnp.int32(prefix + s - 1))
+        else:
+            logits, arena = self._slot_prefill(
+                self.params, self.pool.arena, tokens, jnp.int32(slot),
+                *extra)
+        self.pool.arena = arena
+
+        sp = req.sampling or SamplingParams()
+        eos = -1 if req.eos_id is None else int(req.eos_id)
+        tok0_dev, carry_key = self._first_sample(
+            logits, jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+            jnp.int32(sp.seed))
+        tok0 = int(tok0_dev)                       # device sync: TTFT point
+        now = time.perf_counter()
+        rs.first_token_t = now
+        self._stats.prefill_time_s += now - t0
+        self._stats.prompt_tokens += s
+        rs.emit(tok0)
+
+        active = req.max_new_tokens > 1 and tok0 != eos
+        self._state = self._admit_update(
+            self._state, jnp.int32(slot), jnp.int32(tok0),
+            jnp.int32(prefix + s), jnp.bool_(active),
+            jnp.float32(sp.temperature), jnp.int32(sp.top_k), carry_key,
+            jnp.int32(eos), jnp.int32(req.max_new_tokens))
+        if not active:
+            finished.append(self._finish_slot(slot))
+
+    def _finish_slot(self, slot: int) -> Completion:
+        rs = self.scheduler.finish(slot)
+        req = rs.request
+        stop = req.eos_id is not None and rs.tokens \
+            and rs.tokens[-1] == req.eos_id
+        now = time.perf_counter()
+        comp = Completion(
+            request_id=req.request_id, tokens=list(rs.tokens),
+            n_prompt=len(req.tokens),
+            finish_reason="stop" if stop else "length",
+            ttft_s=(rs.first_token_t or now) - rs.submit_t,
+            latency_s=now - rs.submit_t)
+        st = self._stats
+        st.requests_completed += 1
+        st.generated_tokens += len(rs.tokens)
+        st.ttft_s.append(comp.ttft_s)
+        st.latency_s.append(comp.latency_s)
+        return comp
+
+    # ----------------------------------------------------------- stepping
+    def step(self) -> list[Completion]:
+        """One scheduling tick: admit into free slots, then run one fused
+        decode block.  Returns requests that finished this tick."""
+        finished: list[Completion] = []
+        for slot, rs in self.scheduler.admissions():
+            self._admit(slot, rs, finished)
+
+        if self.scheduler.running:
+            t0 = time.perf_counter()
+            arena, state, out, iters = self._decode_block(
+                self.params, self.pool.arena, self._state)
+            out_host = np.asarray(out)             # device sync
+            self._stats.decode_time_s += time.perf_counter() - t0
+            self.pool.arena = arena
+            self._state = state
+            active_host = np.asarray(state.active)
+            st = self._stats
+            st.decode_ticks += 1
+            st.slot_ticks_total += int(iters) * self.config.slots
+            for slot in list(self.scheduler.running):
+                col = out_host[:, slot]
+                toks = col[col >= 0]
+                st.slot_ticks_active += len(toks)
+                rs = self.scheduler.running[slot]
+                for t in toks:
+                    rs.emit(int(t))
+                if not active_host[slot]:
+                    finished.append(self._finish_slot(slot))
+        self._completed.extend(finished)
+        return finished
+
+    # ----------------------------------------------------------- frontends
+    def generate(self, requests, max_new_tokens: int | None = None,
+                 *extra, sampling: SamplingParams | None = None,
+                 eos_id: int | None = None):
+        """Run requests to completion.
+
+        Two forms:
+
+        * ``generate(list[Request])`` -> ``list[Completion]`` in request
+          order (the engine API);
+        * ``generate(tokens [B, S], max_new_tokens, *extra)`` -> token
+          array ``[B, max_new_tokens]`` (legacy convenience, greedy unless
+          ``sampling`` is given; requires ``eos_id=None`` so every row
+          decodes the full budget).
+        """
+        if not isinstance(requests, (list, tuple)):
+            return self._generate_array(requests, max_new_tokens, extra,
+                                        sampling, eos_id)
+        pending = {r.request_id for r in requests}
+        done: dict[int, Completion] = {}
+        for r in requests:
+            self.submit(r)
+        while self.has_work and pending - set(done):
+            for c in self.step():
+                done[c.request_id] = c
+        return [done[r.request_id] for r in requests]
+
+    def _generate_array(self, tokens, max_new_tokens, extra, sampling,
+                        eos_id):
+        tokens = np.asarray(tokens)
+        if max_new_tokens is None:
+            max_new_tokens = 16
+        b = tokens.shape[0]
+        if max_new_tokens <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
+        reqs = [Request(tokens=[int(t) for t in tokens[i]],
+                        max_new_tokens=max_new_tokens,
+                        sampling=sampling or SamplingParams(),
+                        eos_id=eos_id,
+                        extra=tuple(np.asarray(a)[i] for a in extra))
+                for i in range(b)]
+        comps = self.generate(reqs)
+        width = max(len(c.tokens) for c in comps)
+        out = np.zeros((b, width), np.int32)
+        for i, c in enumerate(comps):
+            out[i, :len(c.tokens)] = c.tokens
+            if len(c.tokens) < width:               # early EOS: pad with it
+                out[i, len(c.tokens):] = c.tokens[-1]
+        return jnp.asarray(out)
+
+    # -------------------------------------------------------------- control
+    def drain(self) -> list[Completion]:
+        """Step until idle; returns everything that finished."""
+        out: list[Completion] = []
+        while self.has_work:
+            out.extend(self.step())
+        return out
+
+    def reset(self, *, params: PyTree | None = None) -> "ServeEngine":
+        """Clear queues/stats (keeping the arena and every compiled step);
+        optionally swap in fresh params (e.g. after more training)."""
+        if params is not None:
+            self.params = params
+        self.scheduler.reset()
+        self._state = _init_slot_state(self.config.slots)
+        self._stats = EngineStats()
+        self._completed = []
+        return self

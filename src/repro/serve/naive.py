@@ -1,0 +1,57 @@
+"""The pre-engine serving loop, preserved as reference semantics.
+
+This is the old ``InferenceSession.generate`` verbatim: one fixed batch at
+a time, a fresh full-size KV cache per call, a Python decode loop that
+runs every sequence to ``max_new_tokens`` with no EOS exit.  It exists so
+the engine has an oracle (greedy-equivalence tests) and a baseline
+(``benchmarks/bench_serve.py``) — production code should use
+:class:`~repro.serve.engine.ServeEngine`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.step import make_decode_step, make_prefill_step
+
+__all__ = ["NaiveLoop", "naive_generate"]
+
+
+class NaiveLoop:
+    """Per-batch greedy decoding with jitted prefill/decode steps."""
+
+    def __init__(self, model, params, *, frontend: str | None = None):
+        self.model = model
+        self.params = params
+        self.frontend = frontend
+        self.prefill = jax.jit(make_prefill_step(model,
+                                                 with_frontend=frontend))
+        self.decode = jax.jit(make_decode_step(model))
+
+    def generate(self, tokens: jax.Array, max_new_tokens: int = 16,
+                 *extra) -> jax.Array:
+        """Prefill ``tokens`` ``[B, S]`` then decode greedily to the full
+        budget (no EOS exit — the old loop's behavior)."""
+        b, s = tokens.shape
+        if max_new_tokens <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
+        # vision prefixes occupy cache positions before the prompt
+        prefix = extra[0].shape[1] if (self.frontend == "vision"
+                                       and extra) else 0
+        cache = self.model.init_cache(b, prefix + s + max_new_tokens)
+        logits, cache = self.prefill(self.params, tokens, cache, *extra)
+        out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+        for i in range(max_new_tokens - 1):
+            pos = jnp.full((b,), prefix + s + i, jnp.int32)
+            logits, cache = self.decode(self.params, cache, out[-1], pos)
+            out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        return jnp.concatenate(out, axis=1)
+
+
+def naive_generate(model, params, tokens, max_new_tokens: int = 16,
+                   *extra, frontend: str | None = None) -> jax.Array:
+    """One-shot helper around :class:`NaiveLoop` (re-jits per call, like
+    the old ``Session.serve()`` did)."""
+    return NaiveLoop(model, params, frontend=frontend).generate(
+        tokens, max_new_tokens, *extra)

@@ -1,0 +1,33 @@
+"""Per-slot token sampling: greedy / temperature / top-k, seeded.
+
+All three modes compile into one branch-free executable so a batch can mix
+greedy and sampled requests lane-by-lane: temperature 0 selects the argmax
+path via ``jnp.where``, ``top_k == 0`` disables truncation by using the
+full vocabulary as the cutoff rank.  Each lane carries its own PRNG key
+(split once per emitted token), so a request's token stream depends only
+on its own ``SamplingParams.seed`` — never on batch composition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_token_sampler"]
+
+
+def make_token_sampler(vocab: int):
+    """Build ``sample(logits [S, V], temp [S], top_k [S], key [S, 2]) ->
+    tokens [S]`` (vmapped over the slot axis)."""
+
+    def sample_one(logits, temp, top_k, key):
+        greedy = jnp.argmax(logits).astype(jnp.int32)
+        k = jnp.where(top_k > 0, top_k, vocab)
+        desc = jnp.sort(logits)[::-1]
+        thresh = desc[jnp.clip(k - 1, 0, vocab - 1)]
+        masked = jnp.where(logits >= thresh, logits, -jnp.inf)
+        scaled = masked / jnp.maximum(temp, 1e-6)
+        sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+        return jnp.where(temp > 0.0, sampled, greedy)
+
+    return jax.vmap(sample_one)

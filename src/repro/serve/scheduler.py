@@ -1,0 +1,93 @@
+"""Continuous-batching scheduler: waiting queue -> slots -> completions.
+
+Decode-priority policy: running requests decode every tick; at each tick
+boundary the scheduler admits waiting requests into freed slots, FIFO, up
+to the per-tick prefill budget and the engine's ``max_batch`` — so a long
+prefill backlog interleaves with decoding instead of stalling it (the
+DreamDDP lesson applied to serving: schedule heterogeneous work
+fine-grained instead of in monolithic batches).
+
+The scheduler is pure bookkeeping (host-side); all device work lives in
+the engine.  Per-request progress is tracked in :class:`RequestState`.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .cache import CachePool
+from .types import Request
+
+__all__ = ["RequestState", "Scheduler"]
+
+
+@dataclass
+class RequestState:
+    """Host-side progress record for one submitted request."""
+
+    request: Request
+    on_token: Callable | None = None       # (request_id, token, index)
+    submit_t: float = 0.0
+    first_token_t: float | None = None
+    slot: int | None = None
+    tokens: list[int] = field(default_factory=list)
+    finish_reason: str = "length"
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    def emit(self, token: int) -> None:
+        self.tokens.append(token)
+        if self.on_token is not None:
+            self.on_token(self.request.request_id, token,
+                          len(self.tokens) - 1)
+
+
+class Scheduler:
+    """FIFO admission into a :class:`CachePool`, decode-priority."""
+
+    def __init__(self, pool: CachePool, *, max_batch: int,
+                 max_prefills_per_tick: int | None = None):
+        self.pool = pool
+        self.max_batch = max_batch
+        self.max_prefills_per_tick = max_prefills_per_tick
+        self.waiting: deque[RequestState] = deque()
+        self.running: dict[int, RequestState] = {}     # slot -> state
+
+    # --------------------------------------------------------------- queues
+    def submit(self, rs: RequestState) -> None:
+        self.waiting.append(rs)
+
+    def admissions(self) -> list[tuple[int, RequestState]]:
+        """Pop (slot, request) pairs admissible this tick."""
+        budget = self.max_prefills_per_tick
+        out: list[tuple[int, RequestState]] = []
+        while self.waiting and len(self.running) < self.max_batch \
+                and (budget is None or len(out) < budget):
+            slot = self.pool.alloc()
+            if slot is None:
+                break
+            rs = self.waiting.popleft()
+            rs.slot = slot
+            self.running[slot] = rs
+            out.append((slot, rs))
+        return out
+
+    def finish(self, slot: int) -> RequestState:
+        """Retire the request in ``slot`` and free the slot for reuse."""
+        rs = self.running.pop(slot)
+        rs.slot = None
+        self.pool.free(slot)
+        return rs
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def reset(self) -> None:
+        self.waiting.clear()
+        self.running.clear()
+        self.pool.reset()

@@ -155,3 +155,102 @@ def test_session_serve_generates():
     out = handle.generate(tokens, max_new_tokens=4)
     assert out.shape == (2, 4)
     assert jnp.all(out >= 0) and jnp.all(out < _CFG.vocab)
+
+
+# ----------------------------------------------------------------- serving
+
+def test_session_serve_returns_engine_and_memoizes():
+    """serve() returns a ServeEngine; repeated serve() (same frontend +
+    engine config) after more fit() reuses the compiled steps."""
+    from repro.serve import EngineConfig, ServeEngine
+
+    sess = _tiny_session("dreamddp")
+    sess.fit(2)
+    cfg = EngineConfig(max_batch=2, max_seq=64)
+    eng = sess.serve(config=cfg)
+    assert isinstance(eng, ServeEngine)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (2, 8), 0,
+                                _CFG.vocab)
+    eng.generate(tokens, 4)
+    misses = eng.compile_stats()
+    sess.fit(2)
+    eng2 = sess.serve(config=cfg)
+    assert eng2 is eng                     # memoized: no re-jit
+    out = eng2.generate(tokens, 4)
+    assert out.shape == (2, 4)
+    assert eng2.compile_stats() == misses  # warm across serve() calls
+    # a different config is a different engine
+    assert sess.serve(config=EngineConfig(max_batch=4, max_seq=64)) \
+        is not eng
+
+
+def test_session_serve_refuses_to_reset_busy_engine():
+    from repro.serve import EngineConfig, Request
+
+    sess = _tiny_session("dreamddp")
+    cfg = EngineConfig(max_batch=2, max_seq=64)
+    eng = sess.serve(config=cfg)
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="drain"):
+        sess.serve(config=cfg)
+    eng.drain()
+    assert sess.serve(config=cfg) is eng     # idle again: safe to reuse
+
+
+def test_inference_session_shim_grows_cache_like_old_loop():
+    """The old loop sized its KV cache per call; the shim must not cap
+    requests at the engine default max_seq."""
+    from repro.api import InferenceSession
+    from repro.serve import EngineConfig
+
+    sess = _tiny_session("dreamddp")
+    with pytest.warns(DeprecationWarning):
+        shim = InferenceSession(sess.model,
+                                sess.model.init(jax.random.PRNGKey(0)),
+                                config=EngineConfig(max_batch=2,
+                                                    max_seq=16))
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (2, 14), 0,
+                                _CFG.vocab)
+    out = shim.generate(tokens, max_new_tokens=8)   # needs 22 > 16
+    assert out.shape == (2, 8)
+
+
+def test_inference_session_shim_deprecated_but_equivalent():
+    from repro.api import InferenceSession
+
+    sess = _tiny_session("dreamddp")
+    sess.fit(2)
+    eng = sess.serve()
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (2, 8), 0,
+                                _CFG.vocab)
+    with pytest.warns(DeprecationWarning, match="ServeEngine"):
+        shim = InferenceSession(sess.model, eng.params)
+    assert jnp.array_equal(shim.generate(tokens, 4),
+                           eng.reset(params=eng.params).generate(tokens, 4))
+
+
+def test_legacy_compress_outer_flags_deprecated_not_threaded():
+    sess = _tiny_session("dreamddp", compress="int8_ef")
+    with pytest.warns(DeprecationWarning, match="algo registry"):
+        scfg = sess.step_config
+    # the flag resolved into the policy and was dropped from the config
+    from repro.core.sync_policies import Int8EFSync
+    assert isinstance(scfg.policy, Int8EFSync)
+    assert scfg.compress is None and scfg.outer is False
+
+    sess_outer = _tiny_session("flsgd", outer=True)
+    with pytest.warns(DeprecationWarning):
+        scfg = sess_outer.step_config
+    from repro.core.sync_policies import OuterOptSync
+    assert isinstance(scfg.policy, OuterOptSync)
+    assert scfg.outer is False
+
+
+def test_step_config_no_warning_without_legacy_flags():
+    import warnings as _warnings
+
+    sess = _tiny_session("dreamddp")
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        scfg = sess.step_config
+    assert scfg.policy is not None

@@ -1,4 +1,6 @@
-"""Smoke test for the batched serving driver (launch/serve.py)."""
+"""Smoke tests for the engine-based serving driver (launch/serve.py)."""
+
+import json
 
 import pytest
 
@@ -10,22 +12,42 @@ def test_serve_main_smoke(capsys):
                      "--prompt-len", "8", "--gen", "3"])
     assert rc == 0
     out = capsys.readouterr().out
-    assert "prefill[2x8]" in out
+    assert "requests=2" in out
     assert "ms/tok" in out
+    assert "ttft mean=" in out
     assert "generated:" in out
 
 
 def test_serve_main_single_token(capsys):
-    """gen=1: no decode steps; the ms/tok division must not blow up."""
+    """gen=1: every request finishes at admission; the ms/tok division
+    must not blow up."""
     rc = serve.main(["--arch", "qwen3-1.7b", "--smoke", "--batch", "1",
                      "--prompt-len", "4", "--gen", "1"])
     assert rc == 0
     assert "decode 0 steps" in capsys.readouterr().out
 
 
+def test_serve_main_trace_mode(tmp_path, capsys):
+    """--requests: trace-driven mixed workload with early EOS."""
+    trace = [
+        {"tokens": [1, 2, 3, 4], "max_new_tokens": 4},
+        {"prompt_len": 7, "max_new_tokens": 6, "temperature": 0.8,
+         "seed": 3},
+        {"prompt_len": 4, "max_new_tokens": 8, "eos_id": 0},
+    ]
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps(trace))
+    rc = serve.main(["--arch", "qwen3-1.7b", "--smoke", "--requests",
+                     str(path), "--max-batch", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "requests=3" in out
+    assert "slot_util=" in out
+
+
 @pytest.mark.slow
 def test_serve_main_audio_frontend(capsys):
-    """The audio frontend wires extra inputs through prefill."""
+    """The audio frontend wires extra inputs through Request.extra."""
     rc = serve.main(["--arch", "whisper-medium", "--smoke", "--batch", "1",
                      "--prompt-len", "4", "--gen", "2"])
     assert rc == 0
