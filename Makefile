@@ -1,4 +1,8 @@
-.PHONY: test test-all test-fast bench sim serve-bench
+.PHONY: test test-all test-fast bench sim serve-bench lint kernels-test check-bench ci
+
+# Every target preserves an existing PYTHONPATH (same idiom as
+# scripts/ci.sh) instead of clobbering it.
+PY_PATH = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 # Tier-1 suite (scripts/ci.sh; deselects tests marked `slow`)
 test:
@@ -6,20 +10,43 @@ test:
 
 # Everything, including slow end-to-end tests (ROADMAP.md verify command)
 test-all:
-	PYTHONPATH=src python -m pytest -x -q
+	$(PY_PATH) python -m pytest -x -q
 
 # Skip the slow end-to-end training tests
 test-fast:
-	PYTHONPATH=src python -m pytest -x -q --ignore=tests/test_train_integration.py
+	$(PY_PATH) python -m pytest -x -q --ignore=tests/test_train_integration.py
 
 bench:
-	PYTHONPATH=src python -m benchmarks.run --fast
+	$(PY_PATH) python -m benchmarks.run --fast
 
-# Continuous batching vs naive serving loop (writes benchmarks/results/)
+# Continuous batching vs naive serving loop + paged-vs-contiguous KV
+# (writes benchmarks/results/ — the check-bench baselines)
 serve-bench:
-	PYTHONPATH=src python -m benchmarks.bench_serve --smoke
+	$(PY_PATH) python -m benchmarks.bench_serve --smoke
 
 # Full SimNet scenario library: conformance sweep + sim-marked tests
 sim:
-	PYTHONPATH=src python -m repro.sim
-	PYTHONPATH=src python -m pytest -q -m sim
+	$(PY_PATH) python -m repro.sim
+	$(PY_PATH) python -m pytest -q -m sim
+
+# ---------------------------------------------------------------- CI tiers
+# The same steps .github/workflows/ci.yml runs, executable locally.
+
+# Syntax gate everywhere; style gate only where a linter is installed
+lint:
+	python -m compileall -q src tests benchmarks scripts examples
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks scripts examples; \
+	else \
+		echo "ruff not installed; compileall-only lint"; \
+	fi
+
+# Pallas kernel parity sweeps (interpret mode vs pure-jnp oracles)
+kernels-test:
+	$(PY_PATH) python -m pytest -x -q tests/test_kernels.py
+
+# Fresh smoke bench vs committed baselines (tolerance-banded)
+check-bench:
+	$(PY_PATH) python scripts/check_bench.py
+
+ci: lint test kernels-test check-bench

@@ -15,10 +15,21 @@ keeps its best of ``REPEATS`` timed passes (CPU wall clock on a tiny
 model is noisy; min-of-N is the standard microbenchmark estimator).
 End-to-end wall times are reported alongside.
 
+The **paged** section compares the engine against itself across KV
+backends on mixed short/long traffic: same requests, same greedy tokens
+(asserted), contiguous arena vs ``kv_backend="paged"``.  Two numbers
+matter: decode goodput (paged must stay within ``PAGED_GOODPUT_BAR`` of
+contiguous — the block-table gather is not free) and **peak KV bytes** —
+the pool's high-water page footprint (what a right-sized deployment
+provisions) vs the contiguous arena's fixed footprint, which must clear
+``PAGED_KV_BAR``.  Token streams and page traffic are deterministic, so
+the byte numbers are exact and regression-gated by
+``scripts/check_bench.py``.
+
 ``python -m benchmarks.bench_serve --smoke`` runs the reduced sweep,
 writes the JSON comparison to ``benchmarks/results/bench_serve.json``,
 and exits non-zero unless the engine clears the 1.3x bar on the mixed
-workload.
+workload and the paged backend clears both paged bars.
 """
 
 from __future__ import annotations
@@ -33,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 SPEEDUP_BAR = 1.3
+PAGED_KV_BAR = 0.6        # paged peak KV bytes <= 0.6x contiguous arena
+PAGED_GOODPUT_BAR = 0.9   # paged decode goodput >= 0.9x contiguous
 REPEATS = 3
 _OUT = os.path.join(os.path.dirname(__file__), "results",
                     "bench_serve.json")
@@ -155,6 +168,71 @@ def run_case(model, params, *, n_requests, short_len, long_len, gen,
     }
 
 
+def run_paged_case(model, params, *, n_requests, short_len, long_len,
+                   gen, max_batch, max_seq, page_size, long_every=4,
+                   decode_block=8, seed=2):
+    """Contiguous vs paged KV backend on mixed-length traffic.
+
+    One long prompt in every ``long_every`` requests; both engines see
+    the identical request list and must emit identical greedy tokens.
+    Goodput is decode-time goodput (warm, best of REPEATS); KV bytes are
+    deterministic: the contiguous arena is always ``n_slots * max_seq``
+    deep, the paged pool reports its high-water footprint.
+    """
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    vocab = model.cfg.vocab
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, vocab,
+                           size=long_len if i % long_every ==
+                           long_every - 1 else short_len).tolist()
+               for i in range(n_requests)]
+    reqs = [Request(tokens=p, max_new_tokens=gen) for p in prompts]
+
+    def measure(cfg):
+        eng = ServeEngine(model, params, cfg)
+        eng.generate(list(reqs))                     # warm
+        best_dec, toks = None, None
+        for _ in range(REPEATS):
+            eng.reset(params=params)
+            comps = eng.generate(list(reqs))
+            dec = eng.stats.decode_time_s
+            if best_dec is None or dec < best_dec:
+                best_dec = dec
+            toks = [c.tokens for c in comps]
+        return eng, best_dec, eng.stats.decode_tokens, toks
+
+    cont_cfg = EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                            decode_block=decode_block)
+    paged_cfg = EngineConfig(max_batch=max_batch, max_seq=max_seq,
+                             decode_block=decode_block,
+                             kv_backend="paged", page_size=page_size)
+    cont_eng, cont_dec, dec_tokens, cont_toks = measure(cont_cfg)
+    paged_eng, paged_dec, paged_tokens, paged_toks = measure(paged_cfg)
+    assert cont_toks == paged_toks, "paged/contiguous divergence in bench"
+    assert dec_tokens == paged_tokens
+
+    cont_bytes = cont_eng.pool.kv_bytes()
+    peak_bytes = paged_eng.pool.peak_kv_bytes()
+    return {
+        "n_requests": n_requests, "short_len": short_len,
+        "long_len": long_len, "gen": gen, "max_batch": max_batch,
+        "max_seq": max_seq, "page_size": page_size,
+        "long_every": long_every, "decode_tokens": dec_tokens,
+        "contiguous": {"decode_time_s": cont_dec,
+                       "decode_tokens_per_s": dec_tokens / cont_dec,
+                       "kv_bytes": cont_bytes},
+        "paged": {"decode_time_s": paged_dec,
+                  "decode_tokens_per_s": dec_tokens / paged_dec,
+                  "peak_kv_bytes": peak_bytes,
+                  "provisioned_kv_bytes": paged_eng.pool.kv_bytes(),
+                  "peak_pages": paged_eng.pool.peak_pages_in_use,
+                  "total_pages": paged_eng.pool.n_usable_pages},
+        "kv_bytes_ratio": peak_bytes / cont_bytes,
+        "goodput_ratio": cont_dec / paged_dec,
+    }
+
+
 def run(*, arch="qwen3-1.7b", smoke=True, out_json=_OUT):
     from repro.configs import get_arch
 
@@ -183,8 +261,32 @@ def run(*, arch="qwen3-1.7b", smoke=True, out_json=_OUT):
               f"{r['useful_tokens']}/{r['naive']['decoded_tokens']} "
               f"decoded)")
 
+    paged_cases = ([dict(n_requests=16, short_len=8, long_len=120,
+                         gen=8, max_batch=8, max_seq=128, page_size=16)]
+                   if smoke else
+                   [dict(n_requests=32, short_len=16, long_len=240,
+                         gen=16, max_batch=8, max_seq=256, page_size=16),
+                    dict(n_requests=32, short_len=16, long_len=112,
+                         gen=16, max_batch=16, max_seq=128,
+                         page_size=16)])
+    paged_rows = []
+    for case in paged_cases:
+        r = run_paged_case(model, params, **case)
+        paged_rows.append(r)
+        print(f"paged batch={r['max_batch']} short={r['short_len']} "
+              f"long={r['long_len']}: goodput "
+              f"contiguous={r['contiguous']['decode_tokens_per_s']:.1f} "
+              f"paged={r['paged']['decode_tokens_per_s']:.1f} tok/s "
+              f"({r['goodput_ratio']:.2f}x); peak KV "
+              f"{r['paged']['peak_kv_bytes'] / 1e6:.2f} MB vs "
+              f"{r['contiguous']['kv_bytes'] / 1e6:.2f} MB "
+              f"({r['kv_bytes_ratio']:.2f}x, pages "
+              f"{r['paged']['peak_pages']}/{r['paged']['total_pages']})")
+
     report = {"arch": arch, "smoke": smoke, "speedup_bar": SPEEDUP_BAR,
-              "rows": rows}
+              "paged_kv_bar": PAGED_KV_BAR,
+              "paged_goodput_bar": PAGED_GOODPUT_BAR,
+              "rows": rows, "paged_rows": paged_rows}
     os.makedirs(os.path.dirname(out_json), exist_ok=True)
     with open(out_json, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
@@ -199,13 +301,30 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=_OUT)
     args = ap.parse_args(argv)
     report = run(arch=args.arch, smoke=args.smoke, out_json=args.out)
+    rc = 0
     best = max(r["speedup"] for r in report["rows"])
     if best < SPEEDUP_BAR:
         print(f"FAIL: best speedup {best:.2f}x < {SPEEDUP_BAR}x")
-        return 1
-    print(f"continuous batching >= {SPEEDUP_BAR}x bar: "
-          f"best {best:.2f}x")
-    return 0
+        rc = 1
+    else:
+        print(f"continuous batching >= {SPEEDUP_BAR}x bar: "
+              f"best {best:.2f}x")
+    for r in report["paged_rows"]:
+        if r["kv_bytes_ratio"] > PAGED_KV_BAR:
+            print(f"FAIL: paged peak KV {r['kv_bytes_ratio']:.2f}x "
+                  f"contiguous > {PAGED_KV_BAR}x bar")
+            rc = 1
+        if r["goodput_ratio"] < PAGED_GOODPUT_BAR:
+            print(f"FAIL: paged goodput {r['goodput_ratio']:.2f}x "
+                  f"contiguous < {PAGED_GOODPUT_BAR}x bar")
+            rc = 1
+    if rc == 0 and report["paged_rows"]:
+        worst_kv = max(r["kv_bytes_ratio"] for r in report["paged_rows"])
+        worst_gp = min(r["goodput_ratio"] for r in report["paged_rows"])
+        print(f"paged KV <= {PAGED_KV_BAR}x bar: worst {worst_kv:.2f}x; "
+              f"goodput >= {PAGED_GOODPUT_BAR}x bar: worst "
+              f"{worst_gp:.2f}x")
+    return rc
 
 
 if __name__ == "__main__":

@@ -99,6 +99,12 @@ def main(argv=None) -> int:
     best = max(r["speedup"] for r in serve_report["rows"])
     if best < bench_serve.SPEEDUP_BAR:
         failures.append(("serve", {"best_speedup": best}))
+    for r in serve_report["paged_rows"]:
+        if r["kv_bytes_ratio"] > bench_serve.PAGED_KV_BAR \
+                or r["goodput_ratio"] < bench_serve.PAGED_GOODPUT_BAR:
+            failures.append(("serve-paged",
+                             {"kv_bytes_ratio": r["kv_bytes_ratio"],
+                              "goodput_ratio": r["goodput_ratio"]}))
 
     if not args.fast:
         from . import bench_convergence

@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: fresh ``bench_serve --smoke`` vs baseline.
+
+Compares a fresh smoke run of ``benchmarks.bench_serve`` (or an existing
+report passed with ``--fresh``) against the committed baseline JSON in
+``benchmarks/results/``.  Two classes of metric:
+
+* **near-exact** — the paged section's accounting (``decode_tokens``,
+  ``kv_bytes_ratio``, ``peak_kv_bytes``, ``peak_pages``) is
+  EOS-independent (every request decodes its full budget and page
+  traffic depends only on request lengths), so it must match the
+  baseline to within ``--exact-tol`` (default 0.5% — tight enough that
+  a single dropped token or leaked page shows up).  Any larger drift
+  means the engine's scheduling/paging behaviour changed — intentional
+  changes regenerate the baseline (``make serve-bench``).
+* **banded** — wall-clock numbers (``speedup``, ``goodput_ratio``) are
+  noisy on shared CI hardware, and the EOS-picking workload's
+  ``useful_tokens`` can move if an XLA upgrade flips a greedy argmax
+  tie, so only a *regression* beyond the tolerance band fails: fresh
+  must be at least ``(1 - tol)`` of baseline (default ``tol`` 0.5;
+  improvements always pass).
+
+Also fails when the fresh run itself misses its absolute bars (the bench
+exits non-zero) or when the workload identity fields diverge — that means
+the baseline is stale and must be regenerated, not waved through.
+
+Usage::
+
+    python scripts/check_bench.py                 # run fresh smoke bench
+    python scripts/check_bench.py --fresh f.json  # compare existing file
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(_ROOT, "benchmarks", "results",
+                        "bench_serve.json")
+
+# workload identity: a mismatch means stale baseline, not a regression
+IDENTITY = ("n_requests", "short_len", "long_len", "gen", "max_batch",
+            "max_seq", "page_size", "long_every", "eos_frac")
+# useful_tokens/useful_decode_tokens depend on WHERE the greedy stream
+# hits its picked EOS, so an XLA upgrade flipping one argmax tie can
+# move them legitimately — banded, not near-exact.  The paged workload
+# has no EOS (every request decodes its full budget) and its page
+# accounting depends only on request lengths, so those stay near-exact.
+EXACT_ROW = ()
+EXACT_PAGED = ("decode_tokens", "kv_bytes_ratio")
+EXACT_PAGED_NESTED = (("paged", "peak_kv_bytes"), ("paged", "peak_pages"),
+                      ("contiguous", "kv_bytes"))
+BANDED_ROW = ("speedup", "useful_tokens", "useful_decode_tokens")
+BANDED_PAGED = ("goodput_ratio",)
+
+EXACT_TOL = 0.005
+
+
+def _fail(problems: list[str], msg: str) -> None:
+    problems.append(msg)
+    print(f"REGRESSION: {msg}")
+
+
+def _cmp_exact(problems, where, key, base, fresh, tol=EXACT_TOL):
+    if abs(fresh - base) > tol * max(abs(base), 1.0):
+        _fail(problems, f"{where}.{key}: fresh {fresh!r} != "
+                        f"baseline {base!r} (deterministic metric, "
+                        f"±{tol:.1%})")
+
+
+def _cmp_banded(problems, where, key, base, fresh, tol):
+    floor = base * (1.0 - tol)
+    if fresh < floor:
+        _fail(problems, f"{where}.{key}: fresh {fresh:.3f} < "
+                        f"{floor:.3f} (baseline {base:.3f} - {tol:.0%} "
+                        f"band)")
+
+
+def _pair_rows(problems, name, base_rows, fresh_rows):
+    if len(base_rows) != len(fresh_rows):
+        _fail(problems, f"{name}: baseline has {len(base_rows)} rows, "
+                        f"fresh has {len(fresh_rows)} — stale baseline?")
+        return []
+    return list(zip(base_rows, fresh_rows))
+
+
+def _check_section(problems, where, b, f, *, exact, exact_nested,
+                   banded, tol, exact_tol):
+    """One baseline/fresh row pair.  Missing-key policy is uniform:
+    keys absent from the *baseline* are skipped (an older baseline
+    simply doesn't gate the newer metric); a gated key absent from the
+    *fresh* report is a clean failure (report-format skew), never a
+    traceback."""
+
+    def present(section, key, container):
+        if key in container:
+            return True
+        _fail(problems, f"{section}.{key}: missing from the fresh "
+                        f"report — bench/report version skew, "
+                        f"regenerate the baseline")
+        return False
+
+    for key in IDENTITY:
+        if key in b and b.get(key) != f.get(key):
+            _fail(problems, f"{where}.{key}: workload changed "
+                            f"({b.get(key)!r} -> {f.get(key)!r}) — "
+                            f"regenerate the baseline")
+    for key in exact:
+        if key in b and present(where, key, f):
+            _cmp_exact(problems, where, key, b[key], f[key], exact_tol)
+    for outer, key in exact_nested:
+        if key in b.get(outer, {}) \
+                and present(f"{where}.{outer}", key, f.get(outer, {})):
+            _cmp_exact(problems, f"{where}.{outer}", key,
+                       b[outer][key], f[outer][key], exact_tol)
+    for key in banded:
+        if key in b and present(where, key, f):
+            _cmp_banded(problems, where, key, b[key], f[key], tol)
+
+
+def compare(baseline: dict, fresh: dict, *, tol: float,
+            exact_tol: float = EXACT_TOL) -> list[str]:
+    problems: list[str] = []
+    for b, f in _pair_rows(problems, "rows", baseline.get("rows", []),
+                           fresh.get("rows", [])):
+        _check_section(
+            problems, f"rows[batch={b.get('max_batch')},gen={b.get('gen')}]",
+            b, f, exact=EXACT_ROW, exact_nested=(), banded=BANDED_ROW,
+            tol=tol, exact_tol=exact_tol)
+    for b, f in _pair_rows(problems, "paged_rows",
+                           baseline.get("paged_rows", []),
+                           fresh.get("paged_rows", [])):
+        _check_section(
+            problems, f"paged_rows[batch={b.get('max_batch')}]", b, f,
+            exact=EXACT_PAGED, exact_nested=EXACT_PAGED_NESTED,
+            banded=BANDED_PAGED, tol=tol, exact_tol=exact_tol)
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--fresh", default=None,
+                    help="existing fresh report (skip running the bench)")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="tolerance band for wall-clock metrics")
+    ap.add_argument("--exact-tol", type=float, default=EXACT_TOL,
+                    help="band for deterministic token/page metrics")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run `make serve-bench` "
+              f"and commit the result")
+        return 1
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    if args.fresh is None:
+        sys.path.insert(0, _ROOT)
+        from benchmarks import bench_serve
+        out = os.path.join(tempfile.mkdtemp(prefix="check_bench_"),
+                           "bench_serve.json")
+        rc = bench_serve.main(["--smoke", "--out", out])
+        if rc != 0:
+            print("REGRESSION: fresh bench run missed its absolute bars")
+            return rc
+        args.fresh = out
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    problems = compare(baseline, fresh, tol=args.tol,
+                       exact_tol=args.exact_tol)
+    if problems:
+        print(f"check_bench: {len(problems)} regression(s) vs "
+              f"{args.baseline}")
+        return 1
+    print(f"check_bench: fresh run within bands of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,10 +10,14 @@ if [ "$#" -gt 0 ]; then
         -m "not slow" "$@"
 else
     # serve engine first: the continuous-batching equivalence/slot-reuse
-    # guarantees are the newest invariants and the cheapest to break
+    # guarantees (contiguous AND paged KV backends) are the newest
+    # invariants and the cheapest to break
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-        -m "not slow" tests/test_serve_engine.py tests/test_serve.py
+        -m "not slow" tests/test_serve_engine.py tests/test_paged_engine.py \
+        tests/test_paged_pool.py tests/test_serve.py
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
         -m "not slow" --ignore=tests/test_serve_engine.py \
+        --ignore=tests/test_paged_engine.py \
+        --ignore=tests/test_paged_pool.py \
         --ignore=tests/test_serve.py
 fi

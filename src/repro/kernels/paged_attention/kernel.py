@@ -1,0 +1,129 @@
+"""Blockwise paged-KV decode attention (Pallas TPU).
+
+One query token per slot attends a KV stream stored in fixed-size
+**pages** of a global pool: slot ``b``'s logical positions
+``[i * page_size, (i + 1) * page_size)`` live in pool page
+``block_tables[b, i]``.  The grid is ``(slots, kv_heads, max_blocks)``
+with the page dimension innermost — TPU grid steps execute sequentially,
+so the online-softmax running state (max ``m``, normalizer ``l``,
+accumulator ``acc``) lives in VMEM scratch across page steps, exactly
+like the flash-attention forward next door.
+
+The page gather is done by the *index maps*: ``block_tables`` (and the
+per-slot valid length ``kv_len``) are scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``), available before the kernel body
+runs, so the k/v BlockSpecs can DMA page ``block_tables[b, ik]`` directly
+— no repacked contiguous KV is ever materialized.  GQA is layout-native:
+``q`` arrives ``[slots, kv_heads, group, head_dim]`` so one grid step
+processes the whole query-head group of one kv head against one page.
+
+See DESIGN.md in this directory for the grid/layout rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attention_fwd"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, *, scale: float, page_size: int, window: int | None):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [g, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)            # [ps, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kv_len = len_ref[b]                               # valid positions
+    k_pos = ik * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], page_size), 1)
+    mask = k_pos < kv_len                             # causal == valid here
+    if window is not None:
+        mask &= k_pos > kv_len - 1 - window           # q position = kv_len-1
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                               # [g]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        kv_len: jax.Array, *, scale: float | None = None,
+                        window: int | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """Single-token decode attention through a per-slot block table.
+
+    q ``[slots, n_q, hd]``; k/v pages ``[n_pages, page_size, n_kv, hd]``;
+    ``block_tables [slots, max_blocks]`` int32 page ids; ``kv_len
+    [slots]`` int32 — positions ``< kv_len[b]`` are attended (the query
+    sits at position ``kv_len[b] - 1``).  Returns ``[slots, n_q, hd]``.
+    """
+    slots, n_q, hd = q.shape
+    n_pages, page_size, n_kv, _ = k_pages.shape
+    max_blocks = block_tables.shape[1]
+    assert n_q % n_kv == 0, (n_q, n_kv)
+    g = n_q // n_kv
+    scale = (hd ** -0.5) if scale is None else scale
+
+    qg = q.reshape(slots, n_kv, g, hd)       # head h attends kv head h // g
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # block_tables, kv_len
+        grid=(slots, n_kv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, ik, bt, kl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, ik, bt, kl: (bt[b, ik], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, ik, bt, kl: (bt[b, ik], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, ik, bt, kl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, page_size=page_size,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, n_kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), kv_len.astype(jnp.int32),
+      qg, k_pages, v_pages)
+
+    return out.reshape(slots, n_q, hd)

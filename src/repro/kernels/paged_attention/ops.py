@@ -1,0 +1,48 @@
+"""Jitted public wrapper: Pallas on TPU, vectorized-XLA gather elsewhere.
+
+Unlike the training-side kernels, paged attention sits on the serving hot
+path, so the non-TPU fallback is the **ref** implementation (one fused
+gather + einsum program), not interpret mode: Pallas interpret executes
+the ``slots x kv_heads x max_blocks`` grid as a Python-level loop, which
+is fine for parity sweeps but orders of magnitude too slow for a decode
+tick.  The kernel-vs-ref parity tests pass ``impl="interpret"``
+explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import paged_attention_fwd
+from .ref import paged_attention_ref
+
+__all__ = ["paged_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def paged_attention(q, k_pages, v_pages, block_tables, kv_len, *,
+                    window: int | None = None, impl: str | None = None):
+    """Paged-KV single-token decode attention.
+
+    q ``[slots, n_q, hd]``, k/v pages ``[n_pages, page_size, n_kv, hd]``,
+    ``block_tables [slots, max_blocks]``, ``kv_len [slots]``.  ``impl``:
+    ``None`` (auto: Mosaic kernel on TPU, ref elsewhere), ``"pallas"``,
+    ``"interpret"`` (kernel body under the Pallas interpreter, for parity
+    tests), or ``"ref"``.
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   kv_len, window=window)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown paged_attention impl {impl!r}")
+    return paged_attention_fwd(q, k_pages, v_pages, block_tables, kv_len,
+                               window=window,
+                               interpret=impl == "interpret")

@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for the paged-attention kernel.
+
+This is also the **engine path on non-TPU backends** (see ops.py), so the
+attention math deliberately mirrors :func:`repro.models.layers.gqa_attention`
+op-for-op (same einsum strings, f32 score accumulation, ``-1e30`` mask
+fill, f32 softmax cast back to the activation dtype): the serve engine's
+greedy paged-vs-contiguous token-for-token equivalence depends on the two
+paths being bitwise identical on the same valid KV entries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def write_token_to_pages(pages: jax.Array, block_tables: jax.Array,
+                         pos: jax.Array, active: jax.Array,
+                         values: jax.Array) -> jax.Array:
+    """Write one token's cache entry per slot into the page pool.
+
+    pages ``[n_pages, page_size, ...]``; ``block_tables [slots,
+    max_blocks]``; ``pos [slots]`` logical write position; ``values
+    [slots, ...]``.  The ``active`` mask routes retired lanes' writes to
+    the reserved trash page (page 0) — the invariant that keeps a
+    retired slot's stale block table from corrupting pages that have
+    since been re-allocated to a new tenant.  Keep every paged cache
+    write on this helper so that gating lives in exactly one place.
+    """
+    page_size = pages.shape[1]
+    blk = jnp.take_along_axis(block_tables, (pos // page_size)[:, None],
+                              axis=1)[:, 0]
+    page_ids = jnp.where(active, blk, 0)
+    return pages.at[page_ids, pos % page_size].set(
+        values.astype(pages.dtype))
+
+
+def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Rebuild each slot's logical KV stream from the page pool.
+
+    pages ``[n_pages, page_size, ...]``, block_tables ``[slots,
+    max_blocks]`` -> ``[slots, max_blocks * page_size, ...]`` in position
+    order (entries past a slot's allocated blocks gather the trash page —
+    callers mask them by valid length).
+    """
+    slots, max_blocks = block_tables.shape
+    g = pages[block_tables]                  # [slots, mb, ps, ...]
+    return g.reshape((slots, max_blocks * pages.shape[1])
+                     + pages.shape[2:])
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        kv_len: jax.Array, *, scale: float | None = None,
+                        window: int | None = None) -> jax.Array:
+    """q ``[slots, n_q, hd]``; k/v pages ``[n_pages, ps, n_kv, hd]``;
+    returns ``[slots, n_q, hd]`` (query at position ``kv_len - 1``)."""
+    slots, n_q, hd = q.shape
+    n_kv = k_pages.shape[2]
+    scale = (hd ** -0.5) if scale is None else scale
+
+    k = gather_pages(k_pages, block_tables)  # [slots, L, n_kv, hd]
+    v = gather_pages(v_pages, block_tables)
+    if n_kv != n_q:
+        k = jnp.repeat(k, n_q // n_kv, axis=2)
+        v = jnp.repeat(v, n_q // n_kv, axis=2)
+    sk = k.shape[1]
+
+    qc = q[:, None]                          # [slots, 1, n_q, hd]
+    scores = jnp.einsum("bqnh,bsnh->bnqs", qc, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpm = (kv_len - 1)[:, None, None, None]
+    kpm = jnp.arange(sk)[None, None, None, :]
+    mask = jnp.ones((slots, 1, 1, sk), bool)
+    mask &= kpm <= qpm
+    if window is not None:
+        mask &= kpm > qpm - window
+    mask &= kpm < kv_len[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnqs,bsnh->bqnh", probs, v)
+    return out[:, 0]

@@ -56,6 +56,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-seq", type=int, default=None)
     ap.add_argument("--decode-block", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--kv-backend", default="contiguous",
+                    choices=("contiguous", "paged"))
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged backend)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="pool pages incl. trash page (default: worst "
+                         "case); smaller pools defer admission")
     args = ap.parse_args(argv)
 
     from ..configs import get_arch
@@ -98,12 +105,18 @@ def main(argv=None) -> int:
     prefix = 8 if arch.frontend == "vision" else 0
     need = max(prefix + len(r.tokens) + r.max_new_tokens
                for r in requests)
+    max_seq = args.max_seq or need
+    if args.kv_backend == "paged":       # pages divide the lane evenly
+        max_seq += (-max_seq) % args.page_size
     engine = ServeEngine(
         model, params,
         EngineConfig(max_batch=args.max_batch or args.batch,
-                     max_seq=args.max_seq or need,
+                     max_seq=max_seq,
                      decode_block=args.decode_block,
-                     prefill_chunk=args.prefill_chunk),
+                     prefill_chunk=args.prefill_chunk,
+                     kv_backend=args.kv_backend,
+                     page_size=args.page_size,
+                     kv_pages=args.kv_pages),
         frontend=arch.frontend)
 
     completions = engine.generate(requests)

@@ -18,10 +18,12 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from ..kernels.paged_attention import gather_pages, write_token_to_pages
 from .layers import Init, apply_rope, norm_init, rms_norm, rope_freqs
 
 __all__ = ["MLAConfig", "mla_init", "mla_apply_full", "mla_decode",
-           "mla_init_cache", "mla_param_count", "mla_fwd_flops"]
+           "mla_init_cache", "mla_init_paged_cache", "mla_decode_paged",
+           "mla_param_count", "mla_fwd_flops"]
 
 
 @dataclass(frozen=True)
@@ -157,12 +159,38 @@ def mla_init_cache(cfg: MLAConfig, batch: int, max_seq: int, dtype) -> dict:
     }
 
 
+def _absorbed_attend(p, cfg: MLAConfig, q_nope, q_rope, c_kv, k_rope,
+                     pos, dtype) -> jax.Array:
+    """Absorbed attention against a latent stream ``c_kv [b, sk, r_kv]``
+    / ``k_rope [b, sk, rope]`` with per-lane valid length ``pos + 1``.
+    Shared by the contiguous and paged decode paths so the two can never
+    drift numerically — queries fold through ``W_uk`` and the combine
+    through ``W_uv``, so scores/outputs live in rank space."""
+    b = q_nope.shape[0]
+    h = cfg.n_heads
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
+    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)          # [b,1,h,r_kv]
+
+    scale = cfg.qk_dim ** -0.5
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_c, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    sk = c_kv.shape[1]
+    valid = jnp.arange(sk)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+
+    o_c = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)           # [b,1,h,r_kv]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_c, w_uv).reshape(b, 1, -1)
+    return o @ p["w_o"]
+
+
 def mla_decode(p, cfg: MLAConfig, x: jax.Array, cache: dict,
                pos: jax.Array) -> tuple[jax.Array, dict]:
     """Absorbed one-token decode.  ``x: [b, 1, d]``, ``pos: [b]`` (0-based
     write position == number of valid cache entries)."""
-    b, _, _ = x.shape
-    h = cfg.n_heads
     inv_freq = rope_freqs(cfg.qk_rope_dim, cfg.rope_theta)
     positions = pos[:, None]
 
@@ -175,24 +203,54 @@ def mla_decode(p, cfg: MLAConfig, x: jax.Array, cache: dict,
     cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
         cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos[0], axis=1)
 
-    # absorb: q_c[h, r_kv] = q_nope[h, nope] @ W_uk[r_kv, h*nope]^T
-    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
-    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)          # [b,1,h,r_kv]
+    out = _absorbed_attend(p, cfg, q_nope, q_rope, cache["c_kv"],
+                           cache["k_rope"], pos, x.dtype)
+    return out, cache
 
-    scale = cfg.qk_dim ** -0.5
-    scores = (jnp.einsum("bqhr,bsr->bhqs", q_c, cache["c_kv"],
-                         preferred_element_type=jnp.float32)
-              + jnp.einsum("bqhd,bsd->bhqs", q_rope, cache["k_rope"],
-                           preferred_element_type=jnp.float32)) * scale
-    sk = cache["c_kv"].shape[1]
-    valid = jnp.arange(sk)[None, None, None, :] <= pos[:, None, None, None]
-    scores = jnp.where(valid, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
 
-    o_c = jnp.einsum("bhqs,bsr->bqhr", probs, cache["c_kv"])  # [b,1,h,r_kv]
-    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
-    o = jnp.einsum("bqhr,rhd->bqhd", o_c, w_uv).reshape(b, 1, -1)
-    return o @ p["w_o"], cache
+def mla_init_paged_cache(cfg: MLAConfig, n_pages: int, page_size: int,
+                         dtype) -> dict:
+    """Latent KV page pool (c_kv + decoupled key-rope, per page)."""
+    return {
+        "c_kv": jnp.zeros((n_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((n_pages, page_size, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode_paged(p, cfg: MLAConfig, x: jax.Array, pages: dict,
+                     block_tables: jax.Array, pos: jax.Array,
+                     active: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed one-token decode against a paged latent cache.
+
+    ``x [slots, 1, d]``; ``pages`` hold ``c_kv [n_pages, ps, r_kv]`` /
+    ``k_rope [n_pages, ps, rope]``; ``block_tables [slots, max_blocks]``
+    int32 page ids; ``pos [slots]`` per-slot write position; ``active
+    [slots]`` gates the page write (inactive lanes write the reserved
+    trash page 0 so a retired slot's stale block table can never corrupt
+    a page that has been re-allocated to a new tenant).
+
+    The MLA pool is paged for *capacity* only: the latent stream is
+    gathered back to position order and attended by the same
+    :func:`_absorbed_attend` the contiguous decode uses (the absorbed
+    score/combine math is rank-space, not head-space, so the GQA paged
+    kernel does not apply).
+    """
+    inv_freq = rope_freqs(cfg.qk_rope_dim, cfg.rope_theta)
+    positions = pos[:, None]
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions, inv_freq)
+    c_new, kr_new = _compress_kv(p, cfg, x, positions, inv_freq)
+
+    c_pages = write_token_to_pages(pages["c_kv"], block_tables, pos,
+                                   active, c_new[:, 0])
+    r_pages = write_token_to_pages(pages["k_rope"], block_tables, pos,
+                                   active, kr_new[:, 0])
+    c_kv = gather_pages(c_pages, block_tables)        # [b, sk, r_kv]
+    k_rope = gather_pages(r_pages, block_tables)
+
+    out = _absorbed_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, pos,
+                           x.dtype)
+    return out, {"c_kv": c_pages, "k_rope": r_pages}
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.partial_sync import UnitEntry, UnitLayout
+from ..kernels.paged_attention import paged_attention, write_token_to_pages
 from . import mla as mla_mod
 from . import moe as moe_mod
 from .layers import (Init, apply_rope, dense, dense_init, embed_init,
@@ -89,6 +90,9 @@ class DecoderLM:
     # cache entries are addressed by position and masked by valid length,
     # so right-padded (chunked) prefill cannot leak into decode
     kv_position_indexed = True
+    # every attention variant (GQA / MoE blocks / MLA latents) stores
+    # position-addressed KV, so the cache can live in a paged pool
+    supports_paged_kv = True
 
     def __init__(self, cfg: LMConfig):
         self.cfg = cfg
@@ -202,6 +206,25 @@ class DecoderLM:
         return box["spec"]
 
     # ----------------------------------------------------------------- apply
+    def _project_qkv(self, p, x, positions):
+        """Shared GQA preamble: projections, optional qk-norm, RoPE.
+        Both cache layouts (contiguous lanes and the paged pool) go
+        through here, so the paged-vs-contiguous bitwise equivalence
+        cannot drift."""
+        cfg = self.cfg
+        b, s, _ = x.shape
+        hd = cfg.hd
+        q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+        k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+        v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(p["q_norm"], q)
+            k = rms_norm(p["k_norm"], k)
+        inv_freq = rope_freqs(hd, cfg.rope_theta)
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+        return q, k, v
+
     def _attend(self, p, x, positions, cache, write_pos):
         """Attention sub-layer; returns (out, new_cache_entry)."""
         cfg = self.cfg
@@ -222,16 +245,7 @@ class DecoderLM:
             return mla_mod.mla_decode(p, cfg.mla, x, cache, write_pos)
 
         b, s, _ = x.shape
-        hd = cfg.hd
-        q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
-        k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
-        v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
-        if cfg.qk_norm:
-            q = rms_norm(p["q_norm"], q)
-            k = rms_norm(p["k_norm"], k)
-        inv_freq = rope_freqs(hd, cfg.rope_theta)
-        q = apply_rope(q, positions, inv_freq)
-        k = apply_rope(k, positions, inv_freq)
+        q, k, v = self._project_qkv(p, x, positions)
 
         if cache is None:
             out = gqa_attention(q, k, v, q_positions=positions,
@@ -423,6 +437,87 @@ class DecoderLM:
                 kind, params[group], x, positions,
                 cache=cache[group], write_pos=pos)
         return self._head(params, x), new_cache
+
+    # -------------------------------------------------------- paged serving
+    def init_paged_cache(self, n_pages: int, page_size: int) -> PyTree:
+        """Global KV page pool: per group, leaves are ``[layers, n_pages,
+        page_size, ...]`` (GQA: k/v heads; MLA: latent + key-rope).  Page
+        0 is reserved by the pool as a trash page (see
+        :class:`repro.serve.cache.PagedCachePool`)."""
+        cfg = self.cfg
+        cache: dict = {}
+        for group, kind, n in cfg.runs():
+            if cfg.mla is not None:
+                one = mla_mod.mla_init_paged_cache(cfg.mla, n_pages,
+                                                   page_size, cfg.dtype)
+            else:
+                one = {
+                    "k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads,
+                                    cfg.hd), cfg.dtype),
+                    "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads,
+                                    cfg.hd), cfg.dtype),
+                }
+            cache[group] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+        return cache
+
+    def _attend_paged(self, p, x, positions, pages, block_tables, pos,
+                      active):
+        """Paged-pool counterpart of the decode branch of ``_attend``:
+        write this token's KV into its slot's current page (inactive
+        lanes write the trash page), then attend through the block
+        table.  ``x [slots, 1, d]``."""
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return mla_mod.mla_decode_paged(p, cfg.mla, x, pages,
+                                            block_tables, pos, active)
+        b, s, _ = x.shape
+        q, k, v = self._project_qkv(p, x, positions)
+        ck = write_token_to_pages(pages["k"], block_tables, pos, active,
+                                  k[:, 0])
+        cv = write_token_to_pages(pages["v"], block_tables, pos, active,
+                                  v[:, 0])
+        out = paged_attention(q[:, 0], ck, cv, block_tables, pos + 1,
+                              window=cfg.window)
+        return out.reshape(b, s, -1) @ p["wo"]["w"], {"k": ck, "v": cv}
+
+    def _block_apply_paged(self, kind, p, x, positions, pages,
+                           block_tables, pos, active):
+        a, new_pages = self._attend_paged(p["attn"],
+                                          self._norm(p["ln1"], x),
+                                          positions, pages, block_tables,
+                                          pos, active)
+        x = x + a
+        h = self._norm(p["ln2"], x)
+        if kind == "moe":
+            x = x + moe_mod.moe_apply(p["mlp"], self.cfg.moe, h)
+        else:
+            x = x + mlp_apply(p["mlp"], h, kind=self.cfg.mlp_kind)
+        return x, new_pages
+
+    def decode_step_paged(self, params, pages, token, pos, block_tables,
+                          active) -> tuple[jax.Array, PyTree]:
+        """Slot-batched one-token decode against the page pool.
+
+        ``token [slots, 1]``, ``pos [slots]`` (per-slot write index),
+        ``block_tables [slots, max_blocks]`` int32, ``active [slots]``
+        bool (gates page writes).  Returns (logits ``[slots, 1, vocab]``,
+        updated page pool).
+        """
+        cfg = self.cfg
+        x = self._embed(params, token, None)
+        positions = pos[:, None]
+        new_pages = {}
+        for group, kind, n in cfg.runs():
+            def body(carry, xs, kd=kind):
+                lp, lpg = xs
+                return self._block_apply_paged(kd, lp, carry, positions,
+                                               lpg, block_tables, pos,
+                                               active)
+
+            x, new_pages[group] = jax.lax.scan(
+                body, x, (params[group], pages[group]))
+        return self._head(params, x), new_pages
 
     # ------------------------------------------------------------- structure
     def unit_layout(self) -> UnitLayout:

@@ -36,7 +36,8 @@ from ..optim.optimizers import Optimizer
 __all__ = ["TrainState", "StepConfig", "init_train_state",
            "make_train_step", "make_phase_steps", "make_prefill_step",
            "make_decode_step", "make_slot_prefill_step",
-           "make_slot_refeed_step", "make_slot_decode_step"]
+           "make_slot_refeed_step", "make_slot_decode_step",
+           "make_slot_decode_step_paged"]
 
 PyTree = Any
 
@@ -253,5 +254,33 @@ def make_slot_decode_step(model):
             one, in_axes=(axes, 0, 0, None),
             out_axes=(0, axes))(arena, tokens, pos, params)
         return logits, new_arena
+
+    return slot_decode
+
+
+def make_slot_decode_step_paged(model):
+    """Batched one-token decode against a **paged** KV pool.
+
+    Same contract as :func:`make_slot_decode_step` (``tokens [S]`` /
+    ``pos [S]`` -> logits ``[S, V]``), but the arena is the model's page
+    pool and two extra per-tick inputs route the KV traffic: the
+    per-slot ``block_tables [S, max_blocks]`` and the ``active [S]``
+    mask (inactive lanes park their writes on the trash page so a
+    retired slot's stale table can never corrupt re-allocated pages).
+    KV-cache families (transformer / moe / mla) implement
+    ``decode_step_paged``; recurrent-state families (mamba2 / rglru)
+    have no position-addressed KV to page and keep their fixed-size
+    state lanes on the contiguous path.
+    """
+    if not getattr(model, "supports_paged_kv", False):
+        raise ValueError(
+            f"{type(model).__name__} does not support a paged KV cache "
+            "(recurrent state lanes / cross-attention KV are fixed-size "
+            "per slot) — use the contiguous backend")
+
+    def slot_decode(params, pages, tokens, pos, block_tables, active):
+        logits, new_pages = model.decode_step_paged(
+            params, pages, tokens[:, None], pos, block_tables, active)
+        return logits[:, 0], new_pages
 
     return slot_decode

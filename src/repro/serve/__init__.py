@@ -26,7 +26,7 @@ Streaming / incremental::
         engine.step()
 """
 
-from .cache import CachePool
+from .cache import CachePool, PagedCachePool
 from .config import EngineConfig
 from .engine import ServeEngine
 from .naive import NaiveLoop, naive_generate
@@ -36,6 +36,7 @@ from .types import Completion, EngineStats, Request, SamplingParams
 
 __all__ = [
     "Request", "SamplingParams", "Completion", "EngineStats",
-    "EngineConfig", "ServeEngine", "CachePool", "Scheduler",
-    "RequestState", "NaiveLoop", "naive_generate", "make_token_sampler",
+    "EngineConfig", "ServeEngine", "CachePool", "PagedCachePool",
+    "Scheduler", "RequestState", "NaiveLoop", "naive_generate",
+    "make_token_sampler",
 ]

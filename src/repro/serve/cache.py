@@ -1,17 +1,28 @@
-"""CachePool — slot-pooled KV/state arena with free-list allocation.
+"""KV-cache pools: contiguous slot arena and paged page pool.
 
-The arena is the model's own cache pytree, allocated **once** for
-``n_slots`` lanes (every model family puts the batch axis at axis 1 of
-each leaf, behind the stacked layer axis).  Requests are admitted into a
-free slot and release it when they finish; the arrays never change shape,
-so admission/retirement never reallocates device memory and never
-invalidates a compiled executable.
+:class:`CachePool` is the original backend: the arena is the model's own
+cache pytree, allocated **once** for ``n_slots`` lanes (every model family
+puts the batch axis at axis 1 of each leaf, behind the stacked layer
+axis).  Requests are admitted into a free slot and release it when they
+finish; the arrays never change shape, so admission/retirement never
+reallocates device memory and never invalidates a compiled executable.
 
 Stale contents in a freed slot are harmless by construction: prefill
 rewrites positions ``[0, prompt_len)`` wholesale (recurrent families
 rebuild their state from scratch), and attention masks every position
 beyond the slot's write frontier (``kv_valid_len``), so a reused slot can
 never read the previous tenant's KV.  The slot-reuse tests pin this.
+
+:class:`PagedCachePool` applies the DreamDDP decomposition to the memory
+axis: instead of every slot paying a full contiguous ``max_seq`` lane,
+KV lives in fixed-size **pages** of a shared pool and each slot maps its
+logical blocks to physical pages through a block table.  A request only
+ever holds ``ceil(need / page_size)`` pages, so short requests stop
+subsidizing long ones and the same device memory admits more slots.
+``admit`` (:meth:`alloc`) reserves a worst-case page *commitment*,
+``extend`` materializes pages lazily as the decode frontier advances
+(never failing, by the commitment invariant), and ``free`` returns both
+— none of which ever reallocates the pool or recompiles an executable.
 """
 
 from __future__ import annotations
@@ -19,16 +30,22 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["CachePool"]
+__all__ = ["CachePool", "PagedCachePool", "make_prefill_scatter"]
 
 PyTree = Any
 
 SLOT_AXIS = 1  # cache leaves are [layers, batch, ...] across all families
 
+TRASH_PAGE = 0  # reserved page: absorbs masked/inactive writes, never read
+
 
 class CachePool:
     """Fixed arena of ``n_slots`` cache lanes + a host-side free list."""
+
+    backend = "contiguous"
 
     def __init__(self, model, n_slots: int, max_seq: int):
         self.n_slots = n_slots
@@ -40,23 +57,222 @@ class CachePool:
                     f"cache leaf {leaf.shape} does not carry the slot axis "
                     f"at axis {SLOT_AXIS}; CachePool requires "
                     f"[layers, slots, ...] cache layouts")
+        self._init_slots(n_slots)
+
+    def _init_slots(self, n_slots: int) -> None:
         self._free: list[int] = list(range(n_slots - 1, -1, -1))
+        # O(1) double-free detection (a `slot in self._free` scan is
+        # O(n_slots) per retirement — it shows once pools carry hundreds
+        # of lanes/pages)
+        self._is_free = bytearray([1]) * n_slots
 
     # ------------------------------------------------------------ free list
     @property
     def n_free(self) -> int:
         return len(self._free)
 
-    def alloc(self) -> int | None:
-        """Pop a free slot id, or None when the arena is full."""
-        return self._free.pop() if self._free else None
+    def alloc(self, need_tokens: int = 0) -> int | None:
+        """Pop a free slot id, or None when the arena is full.
+
+        ``need_tokens`` (the request's worst-case cache footprint) is
+        ignored here — every contiguous lane is ``max_seq`` deep — but
+        paged pools use it for admission control, so the scheduler always
+        passes it.
+        """
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._is_free[slot] = 0
+        return slot
 
     def free(self, slot: int) -> None:
-        if slot in self._free or not 0 <= slot < self.n_slots:
+        if not 0 <= slot < self.n_slots or self._is_free[slot]:
             raise ValueError(f"double free / bad slot {slot}")
+        self._is_free[slot] = 1
         self._free.append(slot)
 
     def reset(self) -> None:
         """Release every slot (arena contents are left as-is: stale data
         is unreadable by construction, see module docstring)."""
-        self._free = list(range(self.n_slots - 1, -1, -1))
+        self._init_slots(self.n_slots)
+
+    # ----------------------------------------------------------- accounting
+    def kv_bytes(self) -> int:
+        """Device bytes held by the cache arrays."""
+        return sum(leaf.nbytes
+                   for leaf in jax.tree_util.tree_leaves(self.arena))
+
+
+def make_prefill_scatter(page_size: int):
+    """Build the (jittable) copy of a freshly prefilled scratch lane into
+    the page pool.
+
+    ``pages`` leaves are ``[layers, n_pages, page_size, ...]``; ``scratch``
+    leaves ``[layers, 1, max_seq, ...]``; ``bt_row [max_blocks]`` is the
+    slot's block-table row.  Every block is scattered unconditionally —
+    rows are trash-page-padded past the allocated prefix, so pad blocks
+    land on page 0 and one executable serves every prompt length.
+    """
+
+    def scatter(pages: PyTree, scratch: PyTree, bt_row) -> PyTree:
+        def one(pg, sc):
+            blocks = sc[:, 0].reshape(
+                (pg.shape[0], bt_row.shape[0], page_size) + sc.shape[3:])
+            return pg.at[:, bt_row].set(blocks.astype(pg.dtype))
+
+        return jax.tree.map(one, pages, scratch)
+
+    return scatter
+
+
+class PagedCachePool(CachePool):
+    """Block-table KV pool: slots share ``n_pages`` fixed-size pages.
+
+    Device state (allocated once, shapes never change):
+
+    * ``arena`` — the model's page pool, leaves ``[layers, n_pages,
+      page_size, ...]`` (page 0 is the reserved trash page);
+    * ``scratch`` — one contiguous ``max_seq`` lane; prefill (and the
+      chunked-prefill refeed) run in it unchanged, then one scatter
+      copies the finished blocks into the slot's pages.
+
+    Host state: ``block_tables`` (``[n_slots, max_blocks]`` numpy int32,
+    shipped to the device each decode tick — a few hundred bytes), the
+    page free list, and per-slot page commitments.  Admission reserves
+    the worst-case ``ceil(need / page_size)`` pages up front (so
+    ``extend`` can never fail mid-flight and nothing is ever preempted);
+    physical pages are handed out lazily as the decode frontier crosses
+    block boundaries, so ``peak_pages_in_use`` — the honest provisioning
+    floor — tracks actual traffic, not the commitment.
+    """
+
+    backend = "paged"
+
+    def __init__(self, model, n_slots: int, max_seq: int, *,
+                 page_size: int, n_pages: int | None = None):
+        if not getattr(model, "supports_paged_kv", False):
+            raise ValueError(
+                f"{type(model).__name__} does not support a paged KV "
+                "cache (recurrent state lanes / cross-attention KV are "
+                "fixed-size per slot) — use kv_backend='contiguous'")
+        if max_seq % page_size:
+            raise ValueError(
+                f"max_seq={max_seq} must be a multiple of "
+                f"page_size={page_size}")
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.max_blocks = max_seq // page_size
+        worst = n_slots * self.max_blocks
+        self.n_pages = worst + 1 if n_pages is None else n_pages
+        if self.n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (page 0 is reserved)")
+
+        self.arena: PyTree = model.init_paged_cache(self.n_pages,
+                                                    page_size)
+        self.scratch: PyTree = model.init_cache(1, max_seq)
+        self.block_tables = np.zeros((n_slots, self.max_blocks), np.int32)
+        self._init_slots(n_slots)
+        self._init_pages()
+
+    def _init_pages(self) -> None:
+        self._free_pages: list[int] = list(range(self.n_pages - 1, 0, -1))
+        self._pages_of: list[list[int]] = [[] for _ in range(self.n_slots)]
+        self._commit_pages = [0] * self.n_slots
+        self._committed_total = 0
+        self.pages_in_use = 0
+        self.peak_pages_in_use = 0
+
+    # ----------------------------------------------------------- page maths
+    @property
+    def n_usable_pages(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    # ------------------------------------------------------- admit / extend
+    def alloc(self, need_tokens: int = 0) -> int | None:
+        """Admit: reserve a slot *and* its worst-case page commitment.
+
+        Returns None (request stays queued) when either slots or pages
+        are exhausted — over-committing would make a later ``extend``
+        fail mid-decode, which is the corruption the commitment invariant
+        exists to rule out.
+        """
+        need = self.pages_needed(need_tokens)
+        if not self._free \
+                or self._committed_total + need > self.n_usable_pages:
+            return None
+        slot = super().alloc()
+        self._commit_pages[slot] = need
+        self._committed_total += need
+        return slot
+
+    def extend(self, slot: int, n_tokens: int) -> None:
+        """Materialize pages so positions ``[0, n_tokens)`` of ``slot``
+        are backed (clamped to the slot's admission commitment)."""
+        if self._is_free[slot]:
+            raise ValueError(f"extend on free slot {slot}")
+        if n_tokens > 0 and not self._commit_pages[slot]:
+            raise ValueError(
+                f"slot {slot} was admitted without a page commitment — "
+                "pass the request's need_tokens to alloc(); extending a "
+                "zero-commitment slot would silently route every write "
+                "to the trash page")
+        want = min(self.pages_needed(n_tokens), self._commit_pages[slot])
+        row = self._pages_of[slot]
+        while len(row) < want:
+            if not self._free_pages:    # unreachable if commitments hold
+                raise RuntimeError(
+                    "page pool exhausted past its commitments — "
+                    "allocator invariant violated")
+            page = self._free_pages.pop()
+            self.block_tables[slot, len(row)] = page
+            row.append(page)
+        self.pages_in_use = self.n_usable_pages - len(self._free_pages)
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+
+    def free(self, slot: int) -> None:
+        super().free(slot)
+        self._free_pages.extend(reversed(self._pages_of[slot]))
+        self._pages_of[slot] = []
+        self._committed_total -= self._commit_pages[slot]
+        self._commit_pages[slot] = 0
+        self.block_tables[slot, :] = TRASH_PAGE
+        self.pages_in_use = self.n_usable_pages - len(self._free_pages)
+
+    def reset(self) -> None:
+        self._init_slots(self.n_slots)
+        self._init_pages()
+        self.block_tables[:] = TRASH_PAGE
+
+    # ----------------------------------------------------------- accounting
+    def block_table_row(self, slot: int) -> jax.Array:
+        return jnp.asarray(self.block_tables[slot])
+
+    def device_block_tables(self) -> jax.Array:
+        return jnp.asarray(self.block_tables)
+
+    def kv_bytes(self) -> int:
+        """Provisioned device bytes: page pool + scratch lane."""
+        return super().kv_bytes() + sum(
+            leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.scratch))
+
+    def page_bytes(self) -> int:
+        """Device bytes of ONE page across every layer/leaf."""
+        return sum(leaf.nbytes // self.n_pages
+                   for leaf in jax.tree_util.tree_leaves(self.arena))
+
+    def peak_kv_bytes(self) -> int:
+        """High-water footprint a right-sized pool would have needed:
+        peak live pages (+ the trash page) plus the scratch lane."""
+        scratch = sum(leaf.nbytes
+                      for leaf in jax.tree_util.tree_leaves(self.scratch))
+        return (self.peak_pages_in_use + 1) * self.page_bytes() \
+            + scratch + self.block_tables.nbytes

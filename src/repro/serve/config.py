@@ -46,6 +46,24 @@ class EngineConfig:
         Admission budget per scheduler tick (``None`` = fill every free
         slot).  Lower values keep decode latency smooth under a prefill
         backlog ("decode-priority" interleave).
+    ``kv_backend``
+        ``"contiguous"`` (default): one ``max_seq``-deep lane per slot.
+        ``"paged"``: KV lives in ``page_size``-token pages of a shared
+        pool addressed through per-slot block tables
+        (:class:`repro.serve.cache.PagedCachePool`), so each request only
+        holds its own footprint.  KV-cache families (transformer / moe /
+        mla, incl. the vision frontend) support it; recurrent-state
+        families (mamba2, recurrentgemma) and the audio cross-KV decoder
+        have fixed-size lanes with nothing to page and reject it.
+    ``page_size``
+        Tokens per KV page (paged backend only).  ``max_seq`` must be a
+        multiple of it.
+    ``kv_pages``
+        Total pages in the pool, including the reserved trash page
+        (``None`` = worst case, ``n_slots * max_seq / page_size + 1`` —
+        the contiguous footprint).  Sizing it below worst case is where
+        the memory win comes from: admission defers (requests queue)
+        instead of over-committing when pages run short.
     """
 
     max_batch: int = 8
@@ -54,6 +72,9 @@ class EngineConfig:
     prefill_chunk: int | None = None
     decode_block: int = 8
     max_prefills_per_tick: int | None = None
+    kv_backend: str = "contiguous"
+    page_size: int = 16
+    kv_pages: int | None = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -64,6 +85,20 @@ class EngineConfig:
             raise ValueError("decode_block must be >= 1")
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if self.kv_backend not in ("contiguous", "paged"):
+            raise ValueError(
+                f"kv_backend must be 'contiguous' or 'paged', "
+                f"got {self.kv_backend!r}")
+        if self.kv_backend == "paged":
+            if self.page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            if self.max_seq % self.page_size:
+                raise ValueError(
+                    f"max_seq={self.max_seq} must be a multiple of "
+                    f"page_size={self.page_size}")
+            if self.kv_pages is not None and self.kv_pages < 2:
+                raise ValueError("kv_pages must be >= 2 (page 0 is "
+                                 "the reserved trash page)")
 
     @property
     def slots(self) -> int:

@@ -30,9 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..runtime.step import (make_slot_decode_step, make_slot_prefill_step,
-                            make_slot_refeed_step)
-from .cache import CachePool
+from ..runtime.step import (make_slot_decode_step,
+                            make_slot_decode_step_paged,
+                            make_slot_prefill_step, make_slot_refeed_step)
+from .cache import CachePool, PagedCachePool, make_prefill_scatter
 from .config import EngineConfig
 from .sampling import make_token_sampler
 from .scheduler import RequestState, Scheduler
@@ -74,7 +75,8 @@ def _init_slot_state(n_slots: int) -> _SlotState:
     )
 
 
-def _make_decode_block(model, vocab: int, n_steps: int):
+def _make_decode_block(model, vocab: int, n_steps: int, *,
+                       paged: bool = False):
     """Fused multi-token decode: ``n_steps`` slot-wide ticks in one
     ``lax.while_loop``, exiting early when no lane is active.
 
@@ -82,12 +84,17 @@ def _make_decode_block(model, vocab: int, n_steps: int):
     their ``pos``/``ngen``/``token`` freeze, and whatever their decode
     lane writes into the arena lands beyond any active frontier (masked by
     ``kv_valid_len`` / overwritten by the next prefill), so it is
-    unobservable.
+    unobservable.  With ``paged=True`` the arena is the page pool and the
+    block takes the per-slot block tables as an extra operand (constant
+    across the block's ticks — page extension happens at block
+    boundaries); inactive lanes' writes are routed to the trash page by
+    the ``active`` mask instead of landing beyond a frontier.
     """
-    slot_decode = make_slot_decode_step(model)
+    slot_decode = (make_slot_decode_step_paged(model) if paged
+                   else make_slot_decode_step(model))
     sampler = make_token_sampler(vocab)
 
-    def block(params, arena, st: _SlotState):
+    def block(params, arena, st: _SlotState, block_tables=None):
         n_slots = st.token.shape[0]
         out0 = jnp.full((n_steps, n_slots), -1, jnp.int32)
 
@@ -105,7 +112,11 @@ def _make_decode_block(model, vocab: int, n_steps: int):
 
         def body(carry):
             i, arena, s, out = carry
-            logits, arena = slot_decode(params, arena, s.token, s.pos)
+            if paged:
+                logits, arena = slot_decode(params, arena, s.token, s.pos,
+                                            block_tables, s.active)
+            else:
+                logits, arena = slot_decode(params, arena, s.token, s.pos)
             # greedy fast path: the top-k sort + categorical draw is ~10x
             # an argmax, so skip it unless some active lane samples.  A
             # sampling lane's key still splits exactly once per tick it
@@ -153,7 +164,15 @@ class ServeEngine:
                 "right-padded prefill would corrupt — use exact prefill "
                 "(prefill_chunk=None)")
 
-        self.pool = CachePool(model, self.config.slots, self.config.max_seq)
+        self._paged = self.config.kv_backend == "paged"
+        if self._paged:
+            self.pool: CachePool = PagedCachePool(
+                model, self.config.slots, self.config.max_seq,
+                page_size=self.config.page_size,
+                n_pages=self.config.kv_pages)
+        else:
+            self.pool = CachePool(model, self.config.slots,
+                                  self.config.max_seq)
         self.scheduler = Scheduler(
             self.pool, max_batch=self.config.max_batch,
             max_prefills_per_tick=self.config.max_prefills_per_tick)
@@ -162,12 +181,19 @@ class ServeEngine:
         self._completed: list[Completion] = []
 
         # compiled once per engine; prefill additionally caches one
-        # executable per distinct prompt length (or chunk bucket)
+        # executable per distinct prompt length (or chunk bucket).  With
+        # the paged backend, prefill/refeed run in the pool's single
+        # contiguous scratch lane and one scatter copies the finished
+        # blocks into the slot's pages.
         self._slot_prefill = jax.jit(
             make_slot_prefill_step(model, with_frontend=frontend))
         self._refeed = jax.jit(make_slot_refeed_step(model))
         self._decode_block = jax.jit(
-            _make_decode_block(model, vocab, self.config.decode_block))
+            _make_decode_block(model, vocab, self.config.decode_block,
+                               paged=self._paged))
+        if self._paged:
+            self._prefill_scatter = jax.jit(
+                make_prefill_scatter(self.config.page_size))
         sampler = make_token_sampler(vocab)
 
         def first_sample(logits, temp, top_k, seed):
@@ -222,7 +248,7 @@ class ServeEngine:
                 f"(> max_seq={self.config.max_seq}); raise "
                 f"EngineConfig.max_seq or shorten the request")
         rs = RequestState(request, on_token=on_token,
-                          submit_t=time.perf_counter())
+                          submit_t=time.perf_counter(), need_tokens=need)
         self.scheduler.submit(rs)
         return request.request_id
 
@@ -238,11 +264,14 @@ class ServeEngine:
         """Live jit-cache sizes — the recompile detector the slot-reuse
         tests assert on (admission into a freed slot must not miss)."""
         out = {}
-        for name, fn in (("prefill", self._slot_prefill),
-                         ("refeed", self._refeed),
-                         ("decode_block", self._decode_block),
-                         ("first_sample", self._first_sample),
-                         ("admit_update", self._admit_update)):
+        fns = [("prefill", self._slot_prefill),
+               ("refeed", self._refeed),
+               ("decode_block", self._decode_block),
+               ("first_sample", self._first_sample),
+               ("admit_update", self._admit_update)]
+        if self._paged:
+            fns.append(("prefill_scatter", self._prefill_scatter))
+        for name, fn in fns:
             size = getattr(fn, "_cache_size", None)
             out[name] = size() if callable(size) else -1
         return out
@@ -257,22 +286,36 @@ class ServeEngine:
         s = tokens.shape[1]
         prefix = self._prefix_len(req)
 
+        if self._paged:
+            # back the prompt's pages, prefill the contiguous scratch
+            # lane, then scatter the finished blocks into the pages
+            # (chunk-pad blocks past the allocation land on the trash
+            # page; pad entries inside the last prompt page are masked
+            # by kv_len until decode overwrites them — the same
+            # unreadable-stale-data invariant as the contiguous arena)
+            self.pool.extend(slot, prefix + s)
+            target, slot_idx = self.pool.scratch, jnp.int32(0)
+        else:
+            target, slot_idx = self.pool.arena, jnp.int32(slot)
         chunk = self.config.prefill_chunk
         pad = (-s) % chunk if chunk else 0
         if pad:
             padded = jnp.pad(tokens, ((0, 0), (0, pad)))
             logits, arena = self._slot_prefill(
-                self.params, self.pool.arena, padded, jnp.int32(slot),
-                *extra)
+                self.params, target, padded, slot_idx, *extra)
             # recover the true last-prompt-token logits (see EngineConfig)
             logits, arena = self._refeed(
-                self.params, arena, jnp.int32(slot),
+                self.params, arena, slot_idx,
                 jnp.int32(req.tokens[-1]), jnp.int32(prefix + s - 1))
         else:
             logits, arena = self._slot_prefill(
-                self.params, self.pool.arena, tokens, jnp.int32(slot),
-                *extra)
-        self.pool.arena = arena
+                self.params, target, tokens, slot_idx, *extra)
+        if self._paged:
+            self.pool.scratch = arena
+            self.pool.arena = self._prefill_scatter(
+                self.pool.arena, arena, self.pool.block_table_row(slot))
+        else:
+            self.pool.arena = arena
 
         sp = req.sampling or SamplingParams()
         eos = -1 if req.eos_id is None else int(req.eos_id)
@@ -323,9 +366,21 @@ class ServeEngine:
             self._admit(slot, rs, finished)
 
         if self.scheduler.running:
+            if self._paged:
+                # materialize pages for the block's worst-case frontier
+                # advance (block tables are constant within a block, so
+                # extension happens here, at the boundary; it cannot
+                # fail — admission committed the worst case)
+                for slot, rs in self.scheduler.running.items():
+                    pos = self._prefix_len(rs.request) \
+                        + len(rs.request.tokens) + len(rs.tokens) - 1
+                    self.pool.extend(slot, pos + self.config.decode_block)
+                extra = (self.pool.device_block_tables(),)
+            else:
+                extra = ()
             t0 = time.perf_counter()
             arena, state, out, iters = self._decode_block(
-                self.params, self.pool.arena, self._state)
+                self.params, self.pool.arena, self._state, *extra)
             out_host = np.asarray(out)             # device sync
             self._stats.decode_time_s += time.perf_counter() - t0
             self.pool.arena = arena

@@ -34,6 +34,7 @@ class RequestState:
     slot: int | None = None
     tokens: list[int] = field(default_factory=list)
     finish_reason: str = "length"
+    need_tokens: int = 0                   # worst-case cache footprint
 
     @property
     def n_generated(self) -> int:
@@ -62,12 +63,19 @@ class Scheduler:
         self.waiting.append(rs)
 
     def admissions(self) -> list[tuple[int, RequestState]]:
-        """Pop (slot, request) pairs admissible this tick."""
+        """Pop (slot, request) pairs admissible this tick.
+
+        Admission is FIFO and capacity-aware: the head request's
+        worst-case footprint (``need_tokens``) is offered to the pool,
+        and a paged pool that cannot commit enough pages rejects the
+        admission — the request stays queued (head-of-line, so ordering
+        is preserved) until retirements free capacity.
+        """
         budget = self.max_prefills_per_tick
         out: list[tuple[int, RequestState]] = []
         while self.waiting and len(self.running) < self.max_batch \
                 and (budget is None or len(out) < budget):
-            slot = self.pool.alloc()
+            slot = self.pool.alloc(self.waiting[0].need_tokens)
             if slot is None:
                 break
             rs = self.waiting.popleft()

@@ -1,0 +1,87 @@
+"""scripts/check_bench.py: passes on the committed baselines, fails on
+injected regressions (pure comparison — the fresh bench run itself is
+exercised by `make ci` / the CI bench job, not tier-1)."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "scripts"))
+
+import check_bench  # noqa: E402
+
+
+@pytest.fixture
+def baseline():
+    with open(check_bench.BASELINE) as fh:
+        return json.load(fh)
+
+
+def test_committed_baseline_passes_against_itself(baseline):
+    assert check_bench.compare(baseline, copy.deepcopy(baseline),
+                               tol=0.5) == []
+
+
+def test_improvements_pass(baseline):
+    fresh = copy.deepcopy(baseline)
+    for row in fresh["rows"]:
+        row["speedup"] *= 3.0
+    for row in fresh["paged_rows"]:
+        row["goodput_ratio"] *= 2.0
+    assert check_bench.compare(baseline, fresh, tol=0.5) == []
+
+
+def test_injected_wallclock_regression_fails(baseline):
+    fresh = copy.deepcopy(baseline)
+    fresh["rows"][0]["speedup"] *= 0.3          # below the 50% band
+    problems = check_bench.compare(baseline, fresh, tol=0.5)
+    assert len(problems) == 1 and "speedup" in problems[0]
+
+
+def test_injected_paging_regression_fails(baseline):
+    fresh = copy.deepcopy(baseline)
+    fresh["paged_rows"][0]["kv_bytes_ratio"] += 0.2
+    fresh["paged_rows"][0]["paged"]["peak_kv_bytes"] *= 2
+    problems = check_bench.compare(baseline, fresh, tol=0.5)
+    assert any("kv_bytes_ratio" in p for p in problems)
+    assert any("peak_kv_bytes" in p for p in problems)
+
+
+def test_token_accounting_drift_fails(baseline):
+    # paged decode_tokens is EOS-independent: near-exact, one token off
+    # is a failure
+    fresh = copy.deepcopy(baseline)
+    fresh["paged_rows"][0]["decode_tokens"] += 1
+    problems = check_bench.compare(baseline, fresh, tol=0.5)
+    assert any("decode_tokens" in p for p in problems)
+    # the EOS-picking workload's useful_tokens is banded: a tie-flip
+    # nudge passes, a collapse fails
+    fresh = copy.deepcopy(baseline)
+    fresh["rows"][0]["useful_tokens"] += 1
+    assert check_bench.compare(baseline, fresh, tol=0.5) == []
+    fresh["rows"][0]["useful_tokens"] = \
+        int(baseline["rows"][0]["useful_tokens"] * 0.3)
+    problems = check_bench.compare(baseline, fresh, tol=0.5)
+    assert any("useful_tokens" in p for p in problems)
+
+
+def test_workload_change_flags_stale_baseline(baseline):
+    fresh = copy.deepcopy(baseline)
+    fresh["paged_rows"][0]["page_size"] *= 2
+    problems = check_bench.compare(baseline, fresh, tol=0.5)
+    assert any("regenerate the baseline" in p for p in problems)
+
+
+def test_cli_fresh_path(tmp_path, baseline):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(baseline))
+    assert check_bench.main(["--fresh", str(good)]) == 0
+    bad = copy.deepcopy(baseline)
+    bad["rows"][0]["speedup"] *= 0.1
+    badf = tmp_path / "bad.json"
+    badf.write_text(json.dumps(bad))
+    assert check_bench.main(["--fresh", str(badf)]) == 1

@@ -9,6 +9,8 @@ from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.fused_adam_sync import adamw_ref, fused_adamw_step
 from repro.kernels.int8_quant import (dequantize, quantize,
                                       quantize_rows_ref)
+from repro.kernels.paged_attention import (gather_pages, paged_attention,
+                                           paged_attention_ref)
 from repro.kernels.ssd_scan import ssd_chunk, ssd_chunk_ref
 
 
@@ -42,6 +44,96 @@ def test_flash_attention_non_causal():
     out = flash_attention(q, q, q, causal=False, block_q=64, block_k=64)
     ref = attention_ref(q, q, q, causal=False)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+def _paged_case(seed, slots, nq, nkv, hd, ps, mb, dtype):
+    """Random page pool + disjoint per-slot block tables + ragged
+    lengths; page 0 is the (never-referenced-validly) trash page."""
+    n_pages = 1 + slots * mb
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k0, (slots, nq, hd), dtype)
+    kp = jax.random.normal(k1, (n_pages, ps, nkv, hd), dtype)
+    vp = jax.random.normal(k2, (n_pages, ps, nkv, hd), dtype)
+    rng = np.random.RandomState(seed)
+    bt = rng.permutation(np.arange(1, n_pages)).reshape(slots, mb)
+    # ragged valid lengths, incl. a page-boundary and a full-stream slot
+    kv_len = rng.randint(1, mb * ps + 1, size=slots)
+    kv_len[0] = ps
+    kv_len[-1] = mb * ps
+    # entries past the allocated blocks point at the trash page, like a
+    # real block table (contents there must be masked out by kv_len)
+    for s in range(slots):
+        bt[s, -(-int(kv_len[s]) // ps):] = 0
+    return (q, kp, vp, jnp.asarray(bt, jnp.int32),
+            jnp.asarray(kv_len, jnp.int32))
+
+
+@pytest.mark.parametrize("slots,nq,nkv,hd,ps,mb", [
+    (3, 4, 2, 32, 8, 4),      # GQA
+    (2, 4, 4, 16, 16, 2),     # MHA
+    (4, 8, 1, 8, 8, 8),       # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(slots, nq, nkv, hd, ps, mb, dtype):
+    q, kp, vp, bt, kv_len = _paged_case(slots * nq, slots, nq, nkv, hd,
+                                        ps, mb, dtype)
+    out = paged_attention(q, kp, vp, bt, kv_len, impl="interpret")
+    ref = paged_attention_ref(q, kp, vp, bt, kv_len)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_windowed():
+    q, kp, vp, bt, kv_len = _paged_case(7, 3, 4, 2, 16, 8, 4,
+                                        jnp.float32)
+    out = paged_attention(q, kp, vp, bt, kv_len, window=5,
+                          impl="interpret")
+    ref = paged_attention_ref(q, kp, vp, bt, kv_len, window=5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_ref_matches_contiguous_oracle():
+    """Gathering the pages back to a contiguous stream and running the
+    flash oracle on the valid prefix must agree with the paged ref —
+    the block-table indirection is pure storage layout."""
+    slots, nq, nkv, hd, ps, mb = 2, 4, 2, 16, 8, 4
+    q, kp, vp, bt, kv_len = _paged_case(11, slots, nq, nkv, hd, ps, mb,
+                                        jnp.float32)
+    out = paged_attention_ref(q, kp, vp, bt, kv_len)
+    k = gather_pages(kp, bt)
+    v = gather_pages(vp, bt)
+    for s in range(slots):
+        n = int(kv_len[s])
+        ref = attention_ref(q[s:s + 1, None], k[s:s + 1, :n],
+                            v[s:s + 1, :n], causal=False)
+        np.testing.assert_allclose(np.asarray(out[s]),
+                                   np.asarray(ref[0, 0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_paged_trash_page_contents_never_leak():
+    """Poisoning the trash page (and every unreferenced page) with huge
+    values must not change the output — masking happens before the
+    softmax, not after."""
+    q, kp, vp, bt, kv_len = _paged_case(13, 3, 4, 2, 16, 8, 4,
+                                        jnp.float32)
+    base = paged_attention(q, kp, vp, bt, kv_len, impl="ref")
+    poisoned_k = kp.at[0].set(1e4)
+    poisoned_v = vp.at[0].set(1e4)
+    out = paged_attention(q, poisoned_k, poisoned_v, bt, kv_len,
+                          impl="ref")
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+    out_i = paged_attention(q, poisoned_k, poisoned_v, bt, kv_len,
+                            impl="interpret")
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(base),
                                rtol=2e-5, atol=2e-5)
 
 

@@ -1,0 +1,195 @@
+"""PagedCachePool allocator invariants under seeded churn.
+
+The pool is pure host-side bookkeeping over a fixed device arena, so the
+properties are classic allocator properties: pages are never leaked,
+never shared by two live slots, exhaustion *rejects* admission (returns
+None) instead of over-committing, and reset reclaims everything.  The
+commitment invariant — admission reserves the worst case so ``extend``
+can never fail mid-decode — is exercised by growing every live slot to
+its full footprint each round.
+"""
+
+import random
+
+import pytest
+
+from repro.configs import get_arch
+from repro.serve import CachePool, PagedCachePool
+from repro.serve.cache import TRASH_PAGE
+
+
+def _pool(n_slots=4, max_seq=64, page_size=8, n_pages=None):
+    model = get_arch("qwen3-1.7b").make_smoke()
+    return PagedCachePool(model, n_slots, max_seq, page_size=page_size,
+                          n_pages=n_pages)
+
+
+def _check_invariants(pool):
+    """No page leaked, none shared, block tables consistent."""
+    live = [p for row in pool._pages_of for p in row]
+    assert len(live) == len(set(live)), "page shared by two live slots"
+    assert TRASH_PAGE not in live, "trash page allocated"
+    free = set(pool._free_pages)
+    assert not free & set(live), "page both free and live"
+    assert len(free) + len(live) == pool.n_usable_pages, "page leaked"
+    assert pool.pages_in_use == len(live)
+    for slot, row in enumerate(pool._pages_of):
+        got = pool.block_tables[slot, :len(row)].tolist()
+        assert got == row, "block table diverged from allocator"
+        assert (pool.block_tables[slot, len(row):] == TRASH_PAGE).all(), \
+            "stale block-table entries past the allocation"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_alloc_extend_free_churn(seed):
+    rng = random.Random(seed)
+    pool = _pool(n_slots=6, max_seq=64, page_size=8, n_pages=25)
+    live: dict[int, int] = {}            # slot -> committed tokens
+    grown: dict[int, int] = {}
+    for _ in range(300):
+        op = rng.random()
+        if op < 0.45:
+            need = rng.randint(1, 64)
+            slot = pool.alloc(need)
+            if slot is not None:
+                assert slot not in live
+                live[slot] = need
+                grown[slot] = rng.randint(1, need)
+                pool.extend(slot, grown[slot])
+        elif op < 0.75 and live:
+            slot = rng.choice(list(live))
+            grown[slot] = min(live[slot],
+                              grown[slot] + rng.randint(0, 16))
+            pool.extend(slot, grown[slot])   # never raises: committed
+        elif live:
+            slot = rng.choice(list(live))
+            pool.free(slot)
+            del live[slot], grown[slot]
+        _check_invariants(pool)
+    # drain and verify everything comes back
+    for slot in list(live):
+        pool.free(slot)
+    _check_invariants(pool)
+    assert pool.n_free_pages == pool.n_usable_pages
+    assert pool.n_free == pool.n_slots
+
+
+def test_exhaustion_rejects_admission_instead_of_corrupting():
+    pool = _pool(n_slots=4, max_seq=64, page_size=8, n_pages=9)  # 8 usable
+    a = pool.alloc(40)                    # 5 pages
+    assert a is not None
+    b = pool.alloc(32)                    # 4 pages: 5 + 4 > 8 -> reject
+    assert b is None
+    _check_invariants(pool)
+    c = pool.alloc(24)                    # 3 pages: exactly fits
+    assert c is not None
+    assert pool.alloc(8) is None          # committed full
+    pool.free(a)
+    assert pool.alloc(41) is None         # 6 pages > the 5 uncommitted
+    d = pool.alloc(40)                    # 5 pages fit again
+    assert d is not None
+    _check_invariants(pool)
+
+
+def test_slot_exhaustion_still_bounded_by_slots():
+    pool = _pool(n_slots=2, max_seq=64, page_size=8)
+    assert pool.alloc(8) is not None
+    assert pool.alloc(8) is not None
+    assert pool.alloc(8) is None          # no slot, plenty of pages
+
+
+def test_extend_clamps_to_commitment_and_free_returns_pages():
+    pool = _pool(n_slots=2, max_seq=64, page_size=8, n_pages=17)
+    slot = pool.alloc(17)                 # commit 3 pages
+    pool.extend(slot, 64)                 # asks for 8, clamped to 3
+    assert len(pool._pages_of[slot]) == 3
+    before = pool.n_free_pages
+    pool.free(slot)
+    assert pool.n_free_pages == before + 3
+    with pytest.raises(ValueError):
+        pool.free(slot)                   # double free
+
+
+def test_extend_on_zero_commitment_slot_is_loud():
+    """alloc() without need_tokens commits no pages; extending such a
+    slot must raise instead of silently routing writes to the trash
+    page."""
+    pool = _pool(n_slots=2)
+    slot = pool.alloc()                   # inherited no-need signature
+    with pytest.raises(ValueError, match="commitment"):
+        pool.extend(slot, 8)
+    pool.extend(slot, 0)                  # zero-length extend is fine
+
+
+def test_double_free_and_bad_slot_rejected():
+    pool = _pool(n_slots=3)
+    slot = pool.alloc(8)
+    pool.free(slot)
+    with pytest.raises(ValueError):
+        pool.free(slot)
+    with pytest.raises(ValueError):
+        pool.free(99)
+    with pytest.raises(ValueError):
+        pool.extend(slot, 8)              # extend on a free slot
+
+
+def test_reset_reclaims_everything():
+    pool = _pool(n_slots=4, max_seq=64, page_size=8)
+    for _ in range(3):
+        s = pool.alloc(30)
+        pool.extend(s, 30)
+    assert pool.pages_in_use > 0
+    peak = pool.peak_pages_in_use
+    assert peak > 0
+    pool.reset()
+    _check_invariants(pool)
+    assert pool.n_free == pool.n_slots
+    assert pool.n_free_pages == pool.n_usable_pages
+    assert pool.pages_in_use == 0 and pool.peak_pages_in_use == 0
+    assert (pool.block_tables == TRASH_PAGE).all()
+
+
+def test_worst_case_default_sizing_matches_contiguous_capacity():
+    pool = _pool(n_slots=4, max_seq=64, page_size=8)
+    assert pool.n_usable_pages == 4 * (64 // 8)
+    # every slot can commit its full lane simultaneously
+    slots = [pool.alloc(64) for _ in range(4)]
+    assert None not in slots
+    for s in slots:
+        pool.extend(s, 64)
+    _check_invariants(pool)
+    assert pool.n_free_pages == 0
+
+
+def test_rejects_unsupported_models_and_bad_geometry():
+    mamba = get_arch("mamba2-780m").make_smoke()
+    with pytest.raises(ValueError, match="paged"):
+        PagedCachePool(mamba, 2, 32, page_size=8)
+    model = get_arch("qwen3-1.7b").make_smoke()
+    with pytest.raises(ValueError, match="multiple"):
+        PagedCachePool(model, 2, 30, page_size=8)
+
+
+def test_contiguous_free_bitmask_still_detects_double_free():
+    model = get_arch("qwen3-1.7b").make_smoke()
+    pool = CachePool(model, n_slots=3, max_seq=16)
+    slots = [pool.alloc() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2] and pool.alloc() is None
+    pool.free(slots[1])
+    assert pool.n_free == 1 and pool.alloc() == slots[1]
+    with pytest.raises(ValueError):
+        pool.free(99)
+    pool.free(0)
+    with pytest.raises(ValueError):
+        pool.free(0)
+
+
+def test_peak_pages_tracks_high_water():
+    pool = _pool(n_slots=4, max_seq=64, page_size=8)
+    a = pool.alloc(32); pool.extend(a, 32)      # 4 pages
+    b = pool.alloc(16); pool.extend(b, 16)      # +2 = 6
+    pool.free(a)
+    c = pool.alloc(8); pool.extend(c, 8)        # 2 + 1 = 3 in use
+    assert pool.pages_in_use == 3
+    assert pool.peak_pages_in_use == 6
+    assert pool.peak_kv_bytes() < pool.kv_bytes()
