@@ -1,4 +1,5 @@
-.PHONY: test test-all test-fast bench sim serve-bench lint kernels-test check-bench ci
+.PHONY: test test-all test-fast bench sim serve-bench train-bench \
+	iteration-bench lint kernels-test check-bench ci
 
 # Every target preserves an existing PYTHONPATH (same idiom as
 # scripts/ci.sh) instead of clobbering it.
@@ -24,6 +25,16 @@ bench:
 serve-bench:
 	$(PY_PATH) python -m benchmarks.bench_serve --smoke
 
+# Period-fused training runner vs the per-step oracle (1.3x bar;
+# writes benchmarks/results/bench_train_loop.json)
+train-bench:
+	$(PY_PATH) python -m benchmarks.bench_train_loop --smoke
+
+# Paper Table 1 through the analytic time model (deterministic;
+# writes benchmarks/results/bench_iteration_time.json)
+iteration-bench:
+	$(PY_PATH) python -m benchmarks.bench_iteration_time
+
 # Full SimNet scenario library: conformance sweep + sim-marked tests
 sim:
 	$(PY_PATH) python -m repro.sim
@@ -45,7 +56,8 @@ lint:
 kernels-test:
 	$(PY_PATH) python -m pytest -x -q tests/test_kernels.py
 
-# Fresh smoke bench vs committed baselines (tolerance-banded)
+# Fresh smoke benches (serve + train loop + Table 1) vs the committed
+# baselines (deterministic metrics exact, wall-clock banded)
 check-bench:
 	$(PY_PATH) python scripts/check_bench.py
 

@@ -6,9 +6,19 @@ profiler at the paper's cluster specs, algorithms as their exact
 schedules.  The paper's qualitative ordering
 (S-SGD > ASC-WFBP > FLSGD > PLSGD-ENP > DreamDDP) is asserted by
 ``benchmarks.run``.
+
+``python -m benchmarks.bench_iteration_time --out ...`` writes the table
+as JSON; the committed copy in ``benchmarks/results/`` is the Table-1
+regression baseline for ``scripts/check_bench.py`` — every number is a
+deterministic model-time metric (analytic profile -> schedule search ->
+event timeline; no wall clock), so the gate compares them near-exactly.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 from repro.core import (ascwfbp_iteration_time, build_plan,
                         flsgd_period_time, simulate_period,
@@ -18,6 +28,8 @@ from repro.core.time_model import Partition
 from .paper_models import PAPER_MODELS, paper_profile
 
 H = 5
+_OUT = os.path.join(os.path.dirname(__file__), "results",
+                    "bench_iteration_time.json")
 
 
 def iteration_times(name: str, n_workers: int) -> dict[str, float]:
@@ -58,5 +70,20 @@ def run(csv: bool = True) -> list[dict]:
     return rows
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=_OUT,
+                    help="write the table as JSON (the committed copy is "
+                         "the check_bench baseline)")
+    args = ap.parse_args(argv)
+    rows = run()
+    report = {"H": H, "rows": rows}
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

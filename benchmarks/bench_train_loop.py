@@ -1,0 +1,165 @@
+"""Training hot path: period-fused runner vs the per-step oracle.
+
+Measures steps/sec of the SAME training job (smoke model, DreamDDP
+schedule, synthetic Markov corpus) through the three runner execution
+paths:
+
+* ``per_step`` — one jitted dispatch + one host sync per iteration (the
+  oracle; includes the straggler-clock fix, so it blocks on the
+  completed step);
+* ``fused`` — period-granularity pipeline (default fused path): donated
+  per-phase executables dispatched back-to-back, ONE host sync per
+  H-step period, device-resident metrics drained every ``log_every``
+  periods, data prefetched one period ahead;
+* ``compiled`` — one donated ``make_period_step`` executable per period
+  (``lax.scan`` over the pre-batched ``[H, ...]`` data).
+
+Everything runs warm (untimed warmup pass compiles every executable)
+and each path keeps its best of ``REPEATS`` timed passes.  The fused
+path must clear ``SPEEDUP_BAR`` on at least one model family; the JSON
+report is committed as ``benchmarks/results/bench_train_loop.json`` and
+regression-gated by ``scripts/check_bench.py`` (identity fields exact,
+wall-clock speedups tolerance-banded).
+
+``python -m benchmarks.bench_train_loop --smoke`` runs the reduced
+sweep used by CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+SPEEDUP_BAR = 1.3
+REPEATS = 3
+H = 5
+WORKERS = 4
+BATCH = 2
+SEQ = 8
+_OUT = os.path.join(os.path.dirname(__file__), "results",
+                    "bench_train_loop.json")
+
+
+def _bench_models():
+    """Two model families (dense GQA transformer / attention-free SSM)
+    at bench scale: small enough that the per-iteration dispatch + host
+    sync + per-op overhead the fused runner amortizes is a measurable
+    share of the step — the CPU-container proxy for the accelerator
+    regime, where these families' sub-ms smoke steps make dispatch
+    overhead dominant."""
+    from repro.models.mamba2 import Mamba2Config, Mamba2LM
+    from repro.models.transformer import DecoderLM, LMConfig
+    return (
+        ("transformer", "dense", DecoderLM(LMConfig(
+            name="bench-dense", n_layers=2, d_model=16, n_heads=2,
+            n_kv_heads=1, d_ff=32, vocab=128, head_dim=8,
+            param_dtype="float32", remat=False))),
+        ("mamba2", "ssm", Mamba2LM(Mamba2Config(
+            name="bench-ssm", n_layers=2, d_model=32, vocab=128,
+            d_state=16, head_dim=8, chunk=8,
+            param_dtype="float32"))),
+    )
+
+
+def _steps_per_s(runner, state, n_steps, start, *, fused, repeats):
+    """Best-of-N steps/sec; every pass runs warm and continues the same
+    stream (``start`` advances by whole periods so the fused path stays
+    period-aligned)."""
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        state = runner.run(state, n_steps, start_step=start, fused=fused)
+        dt = time.perf_counter() - t0
+        start += n_steps
+        best = max(best, n_steps / dt)
+    return best, state, start
+
+
+def run_family(name: str, family: str, model, *, steps: int,
+               repeats: int = REPEATS, seed: int = 0) -> dict:
+    import jax
+
+    from repro.core import HardwareSpec, analytic_profile, build_plan
+    from repro.data import MarkovCorpus
+    from repro.optim import make_optimizer
+    from repro.runtime import (Runner, RunnerConfig, StepConfig,
+                               init_train_state)
+
+    prof = analytic_profile(model.layer_costs(BATCH, SEQ),
+                            HardwareSpec(bandwidth=1e9, n_workers=WORKERS))
+    plan = build_plan("dreamddp", prof, H)
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=400)
+    data = MarkovCorpus(vocab=model.cfg.vocab, seq_len=SEQ,
+                        batch_per_worker=BATCH, n_workers=WORKERS,
+                        seed=seed)
+    scfg = StepConfig()
+
+    row = {"model": name, "family": family, "workers": WORKERS, "H": H,
+           "steps": steps, "batch_per_worker": BATCH, "seq": SEQ}
+    rates = {}
+    for mode, fused, exec_ in (("per_step", False, "pipeline"),
+                               ("fused", True, "pipeline"),
+                               ("compiled", True, "compiled")):
+        runner = Runner(model, opt, plan, data, step_cfg=scfg,
+                        run_cfg=RunnerConfig(fused_period=fused,
+                                             period_exec=exec_))
+        state = init_train_state(model, opt, jax.random.PRNGKey(seed),
+                                 WORKERS, cfg=scfg)
+        # warm: compile every executable off the clock
+        state = runner.run(state, H, start_step=0, fused=fused)
+        sps, state, _ = _steps_per_s(runner, state, steps, H,
+                                     fused=fused, repeats=repeats)
+        rates[mode] = sps
+    row["per_step_steps_per_s"] = rates["per_step"]
+    row["fused_steps_per_s"] = rates["fused"]
+    row["compiled_steps_per_s"] = rates["compiled"]
+    row["speedup"] = rates["fused"] / rates["per_step"]
+    row["compiled_speedup"] = rates["compiled"] / rates["per_step"]
+    # the bar is on the period-fused runner in its best executor for
+    # this family (pipeline = bitwise oracle parity; compiled = one
+    # donated executable per period)
+    row["best_speedup"] = max(row["speedup"], row["compiled_speedup"])
+    return row
+
+
+def run(*, smoke: bool = False, out_json: str = _OUT) -> dict:
+    # a timed pass must be long enough to dominate scheduler noise on
+    # shared hardware: ~200 steps ≈ 0.3-0.7 s per pass at bench scale
+    steps = 200 if smoke else 400
+    rows = []
+    for name, family, model in _bench_models():
+        row = run_family(name, family, model, steps=steps)
+        rows.append(row)
+        print(f"{name:>14} ({family}): per-step "
+              f"{row['per_step_steps_per_s']:7.1f} it/s | fused "
+              f"{row['fused_steps_per_s']:7.1f} it/s "
+              f"({row['speedup']:.2f}x) | compiled "
+              f"{row['compiled_steps_per_s']:7.1f} it/s "
+              f"({row['compiled_speedup']:.2f}x)")
+    report = {"smoke": smoke, "H": H, "workers": WORKERS,
+              "speedup_bar": SPEEDUP_BAR, "rows": rows}
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {out_json}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=_OUT)
+    args = ap.parse_args(argv)
+    report = run(smoke=args.smoke, out_json=args.out)
+    best = max(r["best_speedup"] for r in report["rows"])
+    if best < SPEEDUP_BAR:
+        print(f"FAIL: best fused speedup {best:.2f}x < {SPEEDUP_BAR}x")
+        return 1
+    print(f"period-fused runner >= {SPEEDUP_BAR}x bar: best {best:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,9 +1,21 @@
 #!/usr/bin/env python
-"""Benchmark regression gate: fresh ``bench_serve --smoke`` vs baseline.
+"""Benchmark regression gate: fresh smoke benches vs committed baselines.
 
-Compares a fresh smoke run of ``benchmarks.bench_serve`` (or an existing
-report passed with ``--fresh``) against the committed baseline JSON in
-``benchmarks/results/``.  Two classes of metric:
+Gates three reports against the committed baseline JSONs in
+``benchmarks/results/``:
+
+* ``serve`` — ``benchmarks.bench_serve --smoke`` (continuous batching +
+  paged KV);
+* ``train`` — ``benchmarks.bench_train_loop --smoke`` (period-fused
+  runner vs the per-step oracle; wall-clock speedups banded like serve,
+  workload identity exact);
+* ``iteration`` — ``benchmarks.bench_iteration_time`` (paper Table 1
+  through the analytic event-timeline model; every number is
+  deterministic model time, so the whole table is compared near-exactly
+  — any drift means the profiler/scheduler/time model changed and the
+  baseline must be regenerated deliberately).
+
+Two classes of metric:
 
 * **near-exact** — the paged section's accounting (``decode_tokens``,
   ``kv_bytes_ratio``, ``peak_kv_bytes``, ``peak_pages``) is
@@ -26,8 +38,10 @@ the baseline is stale and must be regenerated, not waved through.
 
 Usage::
 
-    python scripts/check_bench.py                 # run fresh smoke bench
-    python scripts/check_bench.py --fresh f.json  # compare existing file
+    python scripts/check_bench.py                 # run all fresh benches
+    python scripts/check_bench.py --only serve,train
+    # compare an existing serve report without running any bench:
+    python scripts/check_bench.py --only serve --fresh f.json
 """
 
 from __future__ import annotations
@@ -39,8 +53,10 @@ import sys
 import tempfile
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINE = os.path.join(_ROOT, "benchmarks", "results",
-                        "bench_serve.json")
+_RESULTS = os.path.join(_ROOT, "benchmarks", "results")
+BASELINE = os.path.join(_RESULTS, "bench_serve.json")
+BASELINE_TRAIN = os.path.join(_RESULTS, "bench_train_loop.json")
+BASELINE_ITER = os.path.join(_RESULTS, "bench_iteration_time.json")
 
 # workload identity: a mismatch means stale baseline, not a regression
 IDENTITY = ("n_requests", "short_len", "long_len", "gen", "max_batch",
@@ -56,6 +72,17 @@ EXACT_PAGED_NESTED = (("paged", "peak_kv_bytes"), ("paged", "peak_pages"),
                       ("contiguous", "kv_bytes"))
 BANDED_ROW = ("speedup", "useful_tokens", "useful_decode_tokens")
 BANDED_PAGED = ("goodput_ratio",)
+
+# train loop: workload identity exact, wall-clock speedups banded
+TRAIN_IDENTITY = ("model", "family", "workers", "H", "steps",
+                  "batch_per_worker", "seq")
+TRAIN_BANDED = ("speedup", "compiled_speedup", "best_speedup")
+
+# Table 1: pure model time — every float is deterministic and compared
+# near-exactly; model/workers are the row identity
+ITER_IDENTITY = ("model", "workers")
+ITER_EXACT = ("ssgd", "ascwfbp", "flsgd", "plsgd-enp", "dreamddp",
+              "S1_vs_ascwfbp", "S2_vs_flsgd")
 
 EXACT_TOL = 0.005
 
@@ -89,7 +116,7 @@ def _pair_rows(problems, name, base_rows, fresh_rows):
 
 
 def _check_section(problems, where, b, f, *, exact, exact_nested,
-                   banded, tol, exact_tol):
+                   banded, tol, exact_tol, identity=IDENTITY):
     """One baseline/fresh row pair.  Missing-key policy is uniform:
     keys absent from the *baseline* are skipped (an older baseline
     simply doesn't gate the newer metric); a gated key absent from the
@@ -104,7 +131,7 @@ def _check_section(problems, where, b, f, *, exact, exact_nested,
                         f"regenerate the baseline")
         return False
 
-    for key in IDENTITY:
+    for key in identity:
         if key in b and b.get(key) != f.get(key):
             _fail(problems, f"{where}.{key}: workload changed "
                             f"({b.get(key)!r} -> {f.get(key)!r}) — "
@@ -124,6 +151,7 @@ def _check_section(problems, where, b, f, *, exact, exact_nested,
 
 def compare(baseline: dict, fresh: dict, *, tol: float,
             exact_tol: float = EXACT_TOL) -> list[str]:
+    """The serve report (``bench_serve.json``)."""
     problems: list[str] = []
     for b, f in _pair_rows(problems, "rows", baseline.get("rows", []),
                            fresh.get("rows", [])):
@@ -141,44 +169,136 @@ def compare(baseline: dict, fresh: dict, *, tol: float,
     return problems
 
 
+def compare_train(baseline: dict, fresh: dict, *, tol: float,
+                  exact_tol: float = EXACT_TOL) -> list[str]:
+    """The train-loop report (``bench_train_loop.json``): identity
+    fields exact, fused/compiled speedups banded (regression-only)."""
+    problems: list[str] = []
+    for b, f in _pair_rows(problems, "train_rows",
+                           baseline.get("rows", []),
+                           fresh.get("rows", [])):
+        _check_section(
+            problems, f"train_rows[{b.get('model')}]", b, f,
+            exact=(), exact_nested=(), banded=TRAIN_BANDED,
+            tol=tol, exact_tol=exact_tol, identity=TRAIN_IDENTITY)
+    return problems
+
+
+def compare_iteration(baseline: dict, fresh: dict, *,
+                      exact_tol: float = EXACT_TOL) -> list[str]:
+    """The Table-1 report (``bench_iteration_time.json``): analytic
+    model time only — everything near-exact."""
+    problems: list[str] = []
+    if baseline.get("H") != fresh.get("H"):
+        _fail(problems, f"iteration.H: {baseline.get('H')} -> "
+                        f"{fresh.get('H')} — regenerate the baseline")
+    for b, f in _pair_rows(problems, "iter_rows",
+                           baseline.get("rows", []),
+                           fresh.get("rows", [])):
+        _check_section(
+            problems,
+            f"iter_rows[{b.get('model')},W={b.get('workers')}]", b, f,
+            exact=ITER_EXACT, exact_nested=(), banded=(),
+            tol=0.0, exact_tol=exact_tol, identity=ITER_IDENTITY)
+    return problems
+
+
+def _load_baseline(path: str, make_cmd: str) -> dict | None:
+    if not os.path.exists(path):
+        print(f"no baseline at {path}; run `{make_cmd}` and commit the "
+              f"result")
+        return None
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def _fresh_report(fresh_arg, bench_main, bench_args, name):
+    """Run a bench smoke unless an existing report was passed.  Returns
+    (report, rc) — rc != 0 means the fresh run missed its absolute
+    bars."""
+    if fresh_arg is None:
+        out = os.path.join(tempfile.mkdtemp(prefix="check_bench_"),
+                           f"{name}.json")
+        rc = bench_main(bench_args + ["--out", out])
+        if rc != 0:
+            print(f"REGRESSION: fresh {name} run missed its absolute "
+                  f"bars")
+            return None, rc
+        fresh_arg = out
+    with open(fresh_arg) as fh:
+        return json.load(fh), 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--baseline-train", default=BASELINE_TRAIN)
+    ap.add_argument("--baseline-iteration", default=BASELINE_ITER)
     ap.add_argument("--fresh", default=None,
-                    help="existing fresh report (skip running the bench)")
+                    help="existing fresh serve report (skip the bench)")
+    ap.add_argument("--fresh-train", default=None,
+                    help="existing fresh train-loop report")
+    ap.add_argument("--fresh-iteration", default=None,
+                    help="existing fresh iteration-time report")
+    ap.add_argument("--only", default="serve,train,iteration",
+                    help="comma list of gates to run")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="tolerance band for wall-clock metrics")
     ap.add_argument("--exact-tol", type=float, default=EXACT_TOL,
-                    help="band for deterministic token/page metrics")
+                    help="band for deterministic metrics")
     args = ap.parse_args(argv)
+    gates = {g.strip() for g in args.only.split(",") if g.strip()}
+    unknown = gates - {"serve", "train", "iteration"}
+    if unknown:
+        ap.error(f"unknown gates {sorted(unknown)}")
 
-    if not os.path.exists(args.baseline):
-        print(f"no baseline at {args.baseline}; run `make serve-bench` "
-              f"and commit the result")
-        return 1
-    with open(args.baseline) as fh:
-        baseline = json.load(fh)
+    sys.path.insert(0, _ROOT)
+    problems: list[str] = []
 
-    if args.fresh is None:
-        sys.path.insert(0, _ROOT)
+    if "serve" in gates:
+        baseline = _load_baseline(args.baseline, "make serve-bench")
+        if baseline is None:
+            return 1
         from benchmarks import bench_serve
-        out = os.path.join(tempfile.mkdtemp(prefix="check_bench_"),
-                           "bench_serve.json")
-        rc = bench_serve.main(["--smoke", "--out", out])
+        fresh, rc = _fresh_report(args.fresh, bench_serve.main,
+                                  ["--smoke"], "bench_serve")
         if rc != 0:
-            print("REGRESSION: fresh bench run missed its absolute bars")
             return rc
-        args.fresh = out
-    with open(args.fresh) as fh:
-        fresh = json.load(fh)
+        problems += compare(baseline, fresh, tol=args.tol,
+                            exact_tol=args.exact_tol)
 
-    problems = compare(baseline, fresh, tol=args.tol,
-                       exact_tol=args.exact_tol)
+    if "train" in gates:
+        baseline = _load_baseline(args.baseline_train, "make train-bench")
+        if baseline is None:
+            return 1
+        from benchmarks import bench_train_loop
+        fresh, rc = _fresh_report(args.fresh_train, bench_train_loop.main,
+                                  ["--smoke"], "bench_train_loop")
+        if rc != 0:
+            return rc
+        problems += compare_train(baseline, fresh, tol=args.tol,
+                                  exact_tol=args.exact_tol)
+
+    if "iteration" in gates:
+        baseline = _load_baseline(args.baseline_iteration,
+                                  "make iteration-bench")
+        if baseline is None:
+            return 1
+        from benchmarks import bench_iteration_time
+        fresh, rc = _fresh_report(args.fresh_iteration,
+                                  bench_iteration_time.main, [],
+                                  "bench_iteration_time")
+        if rc != 0:
+            return rc
+        problems += compare_iteration(baseline, fresh,
+                                      exact_tol=args.exact_tol)
+
     if problems:
-        print(f"check_bench: {len(problems)} regression(s) vs "
-              f"{args.baseline}")
+        print(f"check_bench: {len(problems)} regression(s) vs committed "
+              f"baselines")
         return 1
-    print(f"check_bench: fresh run within bands of {args.baseline}")
+    print(f"check_bench: fresh runs within bands of the committed "
+          f"baselines ({', '.join(sorted(gates))})")
     return 0
 
 

@@ -75,6 +75,13 @@ class JobConfig:
     seed: int = 0
     ckpt_dir: str | None = None
     ckpt_every: int = 200
+    # period-fused training (runtime/DESIGN.md): execute whole H-step
+    # periods with one host sync per period, prefetched data and
+    # device-resident metrics.  "pipeline" keeps the per-step oracle's
+    # bitwise numerics; "compiled" runs one donated lax.scan executable
+    # per period (maximum fusion, ~1-2 ULP re-rounding)
+    fused_period: bool = True
+    period_exec: str = "pipeline"
 
     def replace(self, **kw) -> "JobConfig":
         return dataclasses.replace(self, **kw)
@@ -199,10 +206,20 @@ class Session:
         self._runner = Runner(self.model, self._opt, self.plan, self._data,
                               ckpt=self._ckpt, step_cfg=scfg,
                               run_cfg=RunnerConfig(
-                                  ckpt_every=cfg.ckpt_every))
+                                  ckpt_every=cfg.ckpt_every,
+                                  fused_period=cfg.fused_period,
+                                  period_exec=cfg.period_exec))
 
     def fit(self, steps: int) -> "Session":
-        """Train for ``steps`` iterations (resumable; history accumulates)."""
+        """Train for ``steps`` iterations (resumable; history accumulates).
+
+        With ``JobConfig.fused_period`` (the default) whole H-step
+        periods execute with a single host sync each — data prefetched
+        one period ahead, metrics drained every ``log_every`` periods —
+        falling back to the per-step oracle for partial periods (a
+        ``replan()`` or restore landing mid-period).  Set
+        ``fused_period=False`` to force the per-step path throughout.
+        """
         self._ensure_built()
         self._state = self._runner.run(self._state, steps,
                                        start_step=self._step)

@@ -89,6 +89,39 @@ class SyncPlan:
     def phase_of_iteration(self, r: int) -> int:
         return r % self.H
 
+    def period_start(self, r: int) -> int:
+        """First iteration of the period containing iteration ``r``."""
+        return r - r % self.H
+
+    def all_sync_units(self) -> tuple[int, ...]:
+        """Every unit synchronized anywhere in the period (sorted)."""
+        out: set[int] = set()
+        for units in self.phase_units:
+            out.update(units)
+        return tuple(sorted(out))
+
+    def phase_segments(self) -> tuple[tuple[int, int], ...]:
+        """Period batch layout: maximal runs of consecutive phases whose
+        unit sets are identical, as ``(start_phase, length)`` pairs.
+
+        Phases in one segment compile to the *same* step body (the body
+        depends only on the phase's static unit set), so a period-fused
+        executable rolls each segment into one ``lax.scan`` over the
+        pre-batched ``[H, ...]`` data instead of unrolling H copies —
+        e.g. FLSGD's ``H-1`` local phases + 1 full sync become two
+        segments regardless of H.  The phase index stays static per
+        segment, so every phase keeps its exact scheduled collective
+        bytes and ``segment_cuts`` overlap windows.
+        """
+        segs: list[tuple[int, int]] = []
+        for h in range(self.H):
+            if segs and self.phase_units[h] == \
+                    self.phase_units[segs[-1][0]]:
+                segs[-1] = (segs[-1][0], segs[-1][1] + 1)
+            else:
+                segs.append((h, 1))
+        return tuple(segs)
+
     def sync_frequency(self) -> list[int]:
         """Per-unit sync count per period (>=1; >1 where fills landed)."""
         counts = [0] * self.n_units

@@ -40,9 +40,16 @@ class MarkovCorpus:
                               size=self.vocab)
         self._nexts = jnp.asarray(nexts)
         self._probs = jnp.asarray(probs, jnp.float32)
+        self._base_keys = jnp.stack([
+            jax.random.PRNGKey(self.seed * 1000 + k)
+            for k in range(self.n_workers)])
+        # one jitted program per corpus: the chain scan used to run as
+        # hundreds of eager dispatches per batch (~300 ms of host time —
+        # longer than the train step it feeds); compiled it is ~0.2 ms,
+        # so the runner's period prefetcher can actually hide it
+        self._build = jax.jit(self._batch_impl)
 
-    def batch(self, step: int) -> dict:
-        """Worker-stacked batch ``{tokens, labels}: [W, B, S]`` (int32)."""
+    def _batch_impl(self, step: jax.Array) -> dict:
         def one_worker(worker_key):
             def one_seq(key):
                 k0, key = jax.random.split(key)
@@ -60,12 +67,14 @@ class MarkovCorpus:
             keys = jax.random.split(worker_key, self.batch_per_worker)
             return jax.vmap(one_seq)(keys)
 
-        wkeys = jnp.stack([
-            jax.random.fold_in(jax.random.PRNGKey(self.seed * 1000 + k),
-                               step)
-            for k in range(self.n_workers)])
+        wkeys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            self._base_keys, step)
         toks = jax.vmap(one_worker)(wkeys)
         return {"tokens": toks, "labels": toks}
+
+    def batch(self, step: int) -> dict:
+        """Worker-stacked batch ``{tokens, labels}: [W, B, S]`` (int32)."""
+        return self._build(jnp.asarray(step, jnp.int32))
 
     def entropy_floor(self) -> float:
         """Per-token conditional entropy of the chain (nats) — the loss a
@@ -90,16 +99,21 @@ class TeacherImages:
         self._w2 = jnp.asarray(
             rng.normal(0, 1 / np.sqrt(128), (128, self.n_classes)),
             jnp.float32)
+        self._base_keys = jnp.stack([
+            jax.random.PRNGKey(self.seed * 1000 + k)
+            for k in range(self.n_workers)])
+        self._build = jax.jit(self._batch_impl)   # same reason as Markov
 
-    def batch(self, step: int) -> dict:
+    def _batch_impl(self, step: jax.Array) -> dict:
         def one_worker(key):
             x = jax.random.normal(
                 key, (self.batch_per_worker, self.image_dim))
             logits = jnp.tanh(x @ self._w1) @ self._w2
             return x, jnp.argmax(logits, -1).astype(jnp.int32)
-        wkeys = jnp.stack([
-            jax.random.fold_in(jax.random.PRNGKey(self.seed * 1000 + k),
-                               step)
-            for k in range(self.n_workers)])
+        wkeys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            self._base_keys, step)
         xs, ys = jax.vmap(one_worker)(wkeys)
         return {"images": xs, "labels": ys}
+
+    def batch(self, step: int) -> dict:
+        return self._build(jnp.asarray(step, jnp.int32))

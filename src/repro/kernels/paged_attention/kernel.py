@@ -35,7 +35,8 @@ _NEG_INF = -1e30
 
 
 def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-            l_ref, *, scale: float, page_size: int, window: int | None):
+            l_ref, *, scale: float, page_size: int, window: int | None,
+            skip_pages: bool):
     b = pl.program_id(0)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -46,30 +47,42 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)               # [g, hd]
-    k = k_ref[0, :, 0].astype(jnp.float32)            # [ps, hd]
-    v = v_ref[0, :, 0].astype(jnp.float32)
+    def _page_step():
+        q = q_ref[0, 0].astype(jnp.float32)           # [g, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)        # [ps, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
 
-    kv_len = len_ref[b]                               # valid positions
-    k_pos = ik * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (q.shape[0], page_size), 1)
-    mask = k_pos < kv_len                             # causal == valid here
-    if window is not None:
-        mask &= k_pos > kv_len - 1 - window           # q position = kv_len-1
-    s = jnp.where(mask, s, _NEG_INF)
+        kv_len = len_ref[b]                           # valid positions
+        k_pos = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        mask = k_pos < kv_len                         # causal == valid here
+        if window is not None:
+            mask &= k_pos > kv_len - 1 - window       # q pos = kv_len-1
+        s = jnp.where(mask, s, _NEG_INF)
 
-    m_prev = m_ref[...]                               # [g]
-    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    alpha = jnp.exp(m_prev - m_cur)
-    p = jnp.exp(s - m_cur[:, None])
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_cur
+        m_prev = m_ref[...]                           # [g]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    if skip_pages:
+        # page skip: slot b's stream ends at page ceil(kv_len/ps) - 1;
+        # later grid steps are pure no-ops for this slot (a fully-masked
+        # page contributes alpha=1, p=0, so skipping is bitwise-neutral)
+        # and their k/v index maps re-request the previous page, so the
+        # DMA is elided too — the innermost loop effectively stops at
+        # ceil(kv_len / page_size) instead of scanning all max_blocks.
+        pl.when(ik * page_size < len_ref[b])(_page_step)
+    else:
+        _page_step()
 
     @pl.when(ik == nk - 1)
     def _finish():
@@ -81,6 +94,7 @@ def paged_attention_fwd(q: jax.Array, k_pages: jax.Array,
                         v_pages: jax.Array, block_tables: jax.Array,
                         kv_len: jax.Array, *, scale: float | None = None,
                         window: int | None = None,
+                        skip_pages: bool = True,
                         interpret: bool = False) -> jax.Array:
     """Single-token decode attention through a per-slot block table.
 
@@ -88,6 +102,14 @@ def paged_attention_fwd(q: jax.Array, k_pages: jax.Array,
     ``block_tables [slots, max_blocks]`` int32 page ids; ``kv_len
     [slots]`` int32 — positions ``< kv_len[b]`` are attended (the query
     sits at position ``kv_len[b] - 1``).  Returns ``[slots, n_q, hd]``.
+
+    ``skip_pages`` (default on) stops slot ``b``'s innermost page loop
+    at ``ceil(kv_len[b] / page_size)`` pages instead of scanning all
+    ``max_blocks``: past-the-stream grid steps skip the compute body
+    (bitwise-neutral — their pages would be fully masked anyway) and
+    clamp the k/v index maps to the slot's last valid page, so Mosaic's
+    revisiting check elides the DMA.  Ragged short-``kv_len`` slots in
+    a deep pool stop paying the long tail's page traffic.
     """
     slots, n_q, hd = q.shape
     n_pages, page_size, n_kv, _ = k_pages.shape
@@ -98,15 +120,23 @@ def paged_attention_fwd(q: jax.Array, k_pages: jax.Array,
 
     qg = q.reshape(slots, n_kv, g, hd)       # head h attends kv head h // g
 
+    if skip_pages:
+        def kv_page(b, h, ik, bt, kl):
+            # clamp to the slot's last valid page: grid steps past the
+            # stream re-request the previous block, eliding the copy
+            last = jnp.maximum((kl[b] - 1) // page_size, 0)
+            return (bt[b, jnp.minimum(ik, last)], 0, h, 0)
+    else:
+        def kv_page(b, h, ik, bt, kl):
+            return (bt[b, ik], 0, h, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,               # block_tables, kv_len
         grid=(slots, n_kv, max_blocks),
         in_specs=[
             pl.BlockSpec((1, 1, g, hd), lambda b, h, ik, bt, kl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, ik, bt, kl: (bt[b, ik], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, ik, bt, kl: (bt[b, ik], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), kv_page),
+            pl.BlockSpec((1, page_size, 1, hd), kv_page),
         ],
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda b, h, ik, bt, kl: (b, h, 0, 0)),
@@ -119,7 +149,7 @@ def paged_attention_fwd(q: jax.Array, k_pages: jax.Array,
 
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, page_size=page_size,
-                          window=window),
+                          window=window, skip_pages=skip_pages),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((slots, n_kv, g, hd), q.dtype),
         interpret=interpret,

@@ -25,16 +25,21 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("window", "impl"))
+@functools.partial(jax.jit, static_argnames=("window", "impl",
+                                             "skip_pages"))
 def paged_attention(q, k_pages, v_pages, block_tables, kv_len, *,
-                    window: int | None = None, impl: str | None = None):
+                    window: int | None = None, impl: str | None = None,
+                    skip_pages: bool = True):
     """Paged-KV single-token decode attention.
 
     q ``[slots, n_q, hd]``, k/v pages ``[n_pages, page_size, n_kv, hd]``,
     ``block_tables [slots, max_blocks]``, ``kv_len [slots]``.  ``impl``:
     ``None`` (auto: Mosaic kernel on TPU, ref elsewhere), ``"pallas"``,
     ``"interpret"`` (kernel body under the Pallas interpreter, for parity
-    tests), or ``"ref"``.
+    tests), or ``"ref"``.  ``skip_pages`` (kernel impls only) stops each
+    slot's page loop at ``ceil(kv_len / page_size)`` pages — bitwise-
+    equal output, less page traffic; the ref path always gathers exactly
+    the table's pages.
     """
     if impl is None:
         impl = "pallas" if _on_tpu() else "ref"
@@ -44,5 +49,5 @@ def paged_attention(q, k_pages, v_pages, block_tables, kv_len, *,
     if impl not in ("pallas", "interpret"):
         raise ValueError(f"unknown paged_attention impl {impl!r}")
     return paged_attention_fwd(q, k_pages, v_pages, block_tables, kv_len,
-                               window=window,
+                               window=window, skip_pages=skip_pages,
                                interpret=impl == "interpret")

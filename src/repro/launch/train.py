@@ -56,6 +56,17 @@ def main(argv=None) -> int:
                          "DEPRECATED: register a strategy whose "
                          "sync_policy() returns OuterOptSync)")
     ap.add_argument("--track-divergence", action="store_true")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="period-fused runner: one host sync per H-step "
+                         "period with prefetched data (--no-fused = "
+                         "per-step oracle)")
+    ap.add_argument("--period-exec", default="pipeline",
+                    choices=("pipeline", "compiled"),
+                    help="fused period execution: 'pipeline' (donated "
+                         "per-phase executables, bitwise-equal to the "
+                         "per-step path) or 'compiled' (one lax.scan "
+                         "executable per period)")
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
@@ -72,12 +83,14 @@ def main(argv=None) -> int:
         smoke=args.smoke, lr=args.lr, warmup_steps=10,
         decay_steps=max(args.steps, 100), compress=args.compress,
         outer=args.outer, track_divergence=args.track_divergence,
+        fused_period=args.fused, period_exec=args.period_exec,
         ckpt_dir=args.ckpt_dir))
 
     model = sess.model
     print(f"arch={args.arch} smoke={args.smoke} "
           f"params={model.param_count() / 1e6:.1f}M algo={args.algo} "
-          f"W={args.workers} H={args.period}")
+          f"W={args.workers} H={args.period} "
+          f"fused={'off' if not args.fused else args.period_exec}")
     plan = sess.plan
     print(f"plan: {plan.meta.get('partition_counts')} "
           f"extra_syncs={plan.meta.get('extra_syncs')}")

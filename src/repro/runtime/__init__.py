@@ -1,11 +1,14 @@
+from .pipeline import PeriodPrefetcher, stack_period_batches
 from .runner import Runner, RunnerConfig
 from .step import (StepConfig, TrainState, init_train_state,
-                   make_decode_step, make_phase_steps, make_prefill_step,
-                   make_slot_decode_step, make_slot_prefill_step,
-                   make_slot_refeed_step, make_train_step)
+                   make_decode_step, make_period_step, make_phase_steps,
+                   make_prefill_step, make_slot_decode_step,
+                   make_slot_prefill_step, make_slot_refeed_step,
+                   make_train_step)
 
-__all__ = ["Runner", "RunnerConfig", "StepConfig", "TrainState",
-           "init_train_state", "make_decode_step", "make_phase_steps",
-           "make_prefill_step", "make_slot_decode_step",
-           "make_slot_prefill_step", "make_slot_refeed_step",
-           "make_train_step"]
+__all__ = ["PeriodPrefetcher", "Runner", "RunnerConfig", "StepConfig",
+           "TrainState", "init_train_state", "make_decode_step",
+           "make_period_step", "make_phase_steps", "make_prefill_step",
+           "make_slot_decode_step", "make_slot_prefill_step",
+           "make_slot_refeed_step", "make_train_step",
+           "stack_period_batches"]

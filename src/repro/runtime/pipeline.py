@@ -1,0 +1,80 @@
+"""Double-buffered host->device data pipeline at period granularity.
+
+The fused runner consumes one pre-batched period ``[H, ...]`` per
+dispatch.  :class:`PeriodPrefetcher` builds (and ``jax.device_put``s)
+period *p+1*'s batch while period *p*'s executable is still running:
+``get()`` hands back the already-staged batch, the runner dispatches the
+period step, then calls :meth:`prefetch` for the next period *before*
+blocking on the current one — the stack/transfer work is dispatched
+asynchronously and lands under the period's compute.
+
+Works with any ``data.batch(step) -> pytree`` source: device-resident
+batches (``MarkovCorpus`` computes on device) pass through
+``device_put`` for free, host/numpy pipelines get their H2D copy
+started a period ahead.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PeriodPrefetcher", "stack_period_batches"]
+
+PyTree = Any
+
+
+def stack_period_batches(data: Any, start: int, h: int) -> PyTree:
+    """Batches for iterations ``[start, start + h)`` stacked on a new
+    leading phase axis (the ``make_period_step`` input layout)."""
+    batches = [data.batch(r) for r in range(start, start + h)]
+    if h == 1:
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], batches[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+class PeriodPrefetcher:
+    """One-period-ahead staging of a period's training batches.
+
+    ``stacked=True`` yields the ``[H, ...]`` layout ``make_period_step``
+    consumes; ``stacked=False`` yields the list of H per-step batches
+    the pipeline-mode runner feeds its per-phase executables.
+    """
+
+    def __init__(self, data: Any, h: int, *, stacked: bool = True):
+        self.data = data
+        self.h = h
+        self.stacked = stacked
+        self._staged: tuple[int, PyTree] | None = None
+
+    def _build(self, start: int) -> PyTree:
+        if self.stacked:
+            return jax.device_put(stack_period_batches(self.data, start,
+                                                       self.h))
+        return [jax.device_put(self.data.batch(r))
+                for r in range(start, start + self.h)]
+
+    def get(self, start: int) -> PyTree:
+        """The period batch for iterations ``[start, start + H)`` —
+        already staged if :meth:`prefetch` predicted this start (the
+        common case), built on the spot otherwise (first period, or a
+        rollback after a restore)."""
+        if self._staged is not None and self._staged[0] == start:
+            batch = self._staged[1]
+            self._staged = None
+            return batch
+        self._staged = None
+        return self._build(start)
+
+    def prefetch(self, start: int) -> None:
+        """Asynchronously stage the period starting at ``start`` (call
+        right after dispatching the current period, before blocking)."""
+        if self._staged is not None and self._staged[0] == start:
+            return
+        self._staged = (start, self._build(start))
+
+    def invalidate(self) -> None:
+        """Drop staged work (plan/data changed under us)."""
+        self._staged = None

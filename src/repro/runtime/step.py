@@ -28,16 +28,16 @@ import jax.numpy as jnp
 
 from ..core.outer_opt import OuterConfig, OuterState
 from ..core.partial_sync import (UnitLayout, contiguous_ranges, divergence,
-                                 tree_worker_mean)
-from ..core.plans import SyncPlan
+                                 sync_units, tree_worker_mean)
+from ..core.plans import SyncPlan, local_plan
 from ..core.sync_policies import SyncPolicy, resolve_policy
 from ..optim.optimizers import Optimizer
 
 __all__ = ["TrainState", "StepConfig", "init_train_state",
-           "make_train_step", "make_phase_steps", "make_prefill_step",
-           "make_decode_step", "make_slot_prefill_step",
-           "make_slot_refeed_step", "make_slot_decode_step",
-           "make_slot_decode_step_paged"]
+           "make_train_step", "make_phase_steps", "make_period_step",
+           "make_prefill_step", "make_decode_step",
+           "make_slot_prefill_step", "make_slot_refeed_step",
+           "make_slot_decode_step", "make_slot_decode_step_paged"]
 
 PyTree = Any
 
@@ -143,6 +143,94 @@ def make_phase_steps(model, optimizer: Optimizer, plan: SyncPlan, *,
     """One step function per phase of the period (all static)."""
     return [make_train_step(model, optimizer, plan, h, cfg=cfg)
             for h in range(plan.H)]
+
+
+def compose_makeup_step(local_step, units, layout: UnitLayout):
+    """Straggler make-up body: a pure local step followed by an extra
+    sync of exactly ``units`` — the ONE definition of make-up semantics,
+    shared by the runner's per-step cache and the fused period builder.
+    """
+    units = tuple(sorted(units))
+
+    def makeup(state: TrainState, batch: PyTree):
+        new_state, m = local_step(state, batch)
+        return new_state._replace(
+            params=sync_units(new_state.params, list(units), layout)), m
+
+    return makeup
+
+
+def make_period_step(model, optimizer: Optimizer, plan: SyncPlan, *,
+                     cfg: StepConfig = StepConfig(),
+                     makeup_units: tuple[int, ...] = (),
+                     donate: bool = True):
+    """Roll ALL ``H`` phase steps of ``plan`` into ONE jitted executable.
+
+    The per-step path dispatches one jitted call per iteration from
+    Python, so phase boundaries are host round-trips and XLA can only
+    overlap collectives with compute *inside* a single step's HLO.  The
+    period step takes the whole period's data pre-batched on a leading
+    phase axis (``{tokens: [H, W, B, S], ...}``) and composes the
+    phase-specialized bodies statically: consecutive phases with an
+    identical unit set (``plan.phase_segments()``) become one
+    ``lax.scan`` segment over their batch slice; distinct phases are
+    chained directly.  Each phase keeps its exact scheduled collective
+    bytes and ``segment_cuts`` overlap windows (the phase index is
+    static per segment), and because the whole period is one program,
+    XLA's latency-hiding scheduler can float phase *h*'s parameter
+    all-reduce across phase *h+1*'s forward — the cross-iteration
+    overlap DreamDDP's schedule is designed for.
+
+    ``makeup_units`` (straggler make-up at a period boundary) replaces
+    phase 0's body with the oracle's make-up semantics: a pure local
+    step followed by an extra sync of exactly those units.
+
+    Metrics come back device-resident with a leading ``[H]`` phase axis
+    — the runner drains them on its ``log_every`` cadence instead of
+    blocking every step.  The input state's buffers are donated by
+    default (the period executable updates parameters in place).
+    """
+    layout = model.unit_layout()
+    segments = list(plan.phase_segments())
+    if makeup_units:
+        # phase 0 gets its own body; split it out of its segment
+        s0, l0 = segments[0]
+        segments = [(0, 1)] + ([(1, l0 - 1)] if l0 > 1 else []) \
+            + segments[1:]
+
+    bodies: dict[int, Any] = {}
+    for start, _ in segments:
+        if start == 0 and makeup_units:
+            local = make_train_step(model, optimizer,
+                                    local_plan(plan.n_units), 0, cfg=cfg)
+            bodies[0] = compose_makeup_step(local, makeup_units, layout)
+        else:
+            bodies[start] = make_train_step(model, optimizer, plan, start,
+                                            cfg=cfg)
+
+    def period_step(state: TrainState, batch: PyTree
+                    ) -> tuple[TrainState, dict]:
+        per_seg = []
+        for start, length in segments:
+            body = bodies[start]
+            if length == 1:
+                b = jax.tree.map(lambda x, s=start: x[s], batch)
+                state_, m = body(state, b)
+                state = state_
+                per_seg.append(jax.tree.map(lambda v: v[None], m))
+            else:
+                seg = jax.tree.map(
+                    lambda x, s=start, n=length: x[s:s + n], batch)
+                state, ms = jax.lax.scan(body, state, seg)
+                per_seg.append(ms)
+        if len(per_seg) == 1:
+            metrics = per_seg[0]
+        else:
+            metrics = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *per_seg)
+        return state, metrics
+
+    return jax.jit(period_step, donate_argnums=(0,) if donate else ())
 
 
 # ---------------------------------------------------------------------------

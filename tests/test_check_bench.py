@@ -79,9 +79,90 @@ def test_workload_change_flags_stale_baseline(baseline):
 def test_cli_fresh_path(tmp_path, baseline):
     good = tmp_path / "good.json"
     good.write_text(json.dumps(baseline))
-    assert check_bench.main(["--fresh", str(good)]) == 0
+    assert check_bench.main(["--only", "serve",
+                             "--fresh", str(good)]) == 0
     bad = copy.deepcopy(baseline)
     bad["rows"][0]["speedup"] *= 0.1
     badf = tmp_path / "bad.json"
     badf.write_text(json.dumps(bad))
-    assert check_bench.main(["--fresh", str(badf)]) == 1
+    assert check_bench.main(["--only", "serve",
+                             "--fresh", str(badf)]) == 1
+
+
+# --------------------------------------------------------------- train gate
+
+@pytest.fixture
+def train_baseline():
+    with open(check_bench.BASELINE_TRAIN) as fh:
+        return json.load(fh)
+
+
+def test_train_baseline_passes_against_itself(train_baseline):
+    assert check_bench.compare_train(train_baseline,
+                                     copy.deepcopy(train_baseline),
+                                     tol=0.5) == []
+
+
+def test_train_speedup_regression_fails(train_baseline):
+    fresh = copy.deepcopy(train_baseline)
+    fresh["rows"][0]["best_speedup"] *= 0.3
+    problems = check_bench.compare_train(train_baseline, fresh, tol=0.5)
+    assert len(problems) == 1 and "best_speedup" in problems[0]
+    # improvements always pass
+    fresh = copy.deepcopy(train_baseline)
+    for row in fresh["rows"]:
+        row["speedup"] *= 2
+        row["compiled_speedup"] *= 2
+        row["best_speedup"] *= 2
+    assert check_bench.compare_train(train_baseline, fresh,
+                                     tol=0.5) == []
+
+
+def test_train_workload_change_flags_stale_baseline(train_baseline):
+    fresh = copy.deepcopy(train_baseline)
+    fresh["rows"][0]["steps"] += 100
+    problems = check_bench.compare_train(train_baseline, fresh, tol=0.5)
+    assert any("regenerate the baseline" in p for p in problems)
+
+
+def test_train_cli_fresh_path(tmp_path, train_baseline):
+    good = tmp_path / "train.json"
+    good.write_text(json.dumps(train_baseline))
+    assert check_bench.main(["--only", "train",
+                             "--fresh-train", str(good)]) == 0
+
+
+# ----------------------------------------------------------- iteration gate
+
+@pytest.fixture
+def iter_baseline():
+    with open(check_bench.BASELINE_ITER) as fh:
+        return json.load(fh)
+
+
+def test_iteration_baseline_passes_against_itself(iter_baseline):
+    assert check_bench.compare_iteration(
+        iter_baseline, copy.deepcopy(iter_baseline)) == []
+
+
+def test_iteration_model_time_drift_fails(iter_baseline):
+    # Table 1 is pure analytic model time: ANY drift beyond the exact
+    # tolerance is a regression (profiler/scheduler/time model changed)
+    fresh = copy.deepcopy(iter_baseline)
+    fresh["rows"][0]["dreamddp"] *= 1.02
+    problems = check_bench.compare_iteration(iter_baseline, fresh)
+    assert any("dreamddp" in p for p in problems)
+
+
+def test_iteration_h_change_flags_stale_baseline(iter_baseline):
+    fresh = copy.deepcopy(iter_baseline)
+    fresh["H"] = iter_baseline["H"] + 1
+    problems = check_bench.compare_iteration(iter_baseline, fresh)
+    assert any("regenerate the baseline" in p for p in problems)
+
+
+def test_iteration_cli_fresh_path(tmp_path, iter_baseline):
+    good = tmp_path / "iter.json"
+    good.write_text(json.dumps(iter_baseline))
+    assert check_bench.main(["--only", "iteration",
+                             "--fresh-iteration", str(good)]) == 0

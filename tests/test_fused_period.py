@@ -1,0 +1,261 @@
+"""Period-fused runner: equivalence with the per-step oracle + fault
+tolerance at period granularity (runtime/DESIGN.md).
+
+The fused pipeline executor re-uses the oracle's traced phase programs,
+so its TrainState must be **bitwise identical** — params, opt state, EF
+residuals and DiLoCo outer state — across sync policies and period
+lengths, including run tails that don't fill a period and a ``replan``
+landing mid-period.  The compiled executor (one ``lax.scan`` program
+per period) is numerically free to re-round across phase boundaries
+(~ULPs); it gets a tight-tolerance parity check plus exact-loss
+trajectory at H=1 where the programs coincide.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import HardwareSpec, analytic_profile, build_plan
+from repro.data import MarkovCorpus
+from repro.models.transformer import DecoderLM, LMConfig
+from repro.optim import make_optimizer
+from repro.runtime import (PeriodPrefetcher, Runner, RunnerConfig,
+                           StepConfig, init_train_state,
+                           stack_period_batches)
+
+W = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = LMConfig(name="t", n_layers=4, d_model=48, n_heads=4,
+                   n_kv_heads=2, d_ff=96, vocab=64, param_dtype="float32",
+                   remat=False)
+    model = DecoderLM(cfg)
+    hw = HardwareSpec(bandwidth=1e9, n_workers=W)
+    prof = analytic_profile(model.layer_costs(4, 32), hw)
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=400)
+    data = MarkovCorpus(vocab=64, seq_len=32, batch_per_worker=4,
+                        n_workers=W, seed=0)
+    return model, prof, opt, data
+
+
+def _assert_tree_equal(a, b, what=""):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (_, lb) in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{what}{jax.tree_util.keystr(pa)}")
+
+
+def _runner(setup, H, *, scfg=None, fused=False, exec_="pipeline",
+            algo="dreamddp", **run_kw):
+    model, prof, opt, data = setup
+    plan = build_plan(algo, prof, H)
+    scfg = scfg or StepConfig()
+    run_cfg = RunnerConfig(fused_period=fused, period_exec=exec_,
+                           **run_kw)
+    return Runner(model, opt, plan, data, step_cfg=scfg,
+                  run_cfg=run_cfg), scfg
+
+
+POLICIES = [
+    pytest.param({}, id="plain"),
+    pytest.param({"compress": "int8_ef"}, id="int8_ef",
+                 marks=pytest.mark.slow),
+    pytest.param({"outer": True}, id="outer", marks=pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize("H", [1, 5])
+@pytest.mark.parametrize("policy_kw", POLICIES)
+def test_fused_pipeline_bitwise_equals_per_step(setup, H, policy_kw):
+    """Params / opt state / EF / outer state bitwise across policies and
+    H; n_steps includes a tail that doesn't fill a period."""
+    model, prof, opt, data = setup
+    scfg = StepConfig(**policy_kw)
+    n = 2 * H + 2
+    rp, _ = _runner(setup, H, scfg=scfg)
+    sp = rp.run(init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                                 cfg=scfg), n, fused=False)
+    rf, _ = _runner(setup, H, scfg=scfg, fused=True)
+    sf = rf.run(init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                                 cfg=scfg), n)
+    _assert_tree_equal(sp, sf, "state")
+    assert [h["loss"] for h in rp.history] == \
+        [h["loss"] for h in rf.history]
+    assert [h["step"] for h in rf.history] == list(range(n))
+
+
+@pytest.mark.parametrize("H", [1, pytest.param(5, marks=pytest.mark.slow)])
+def test_compiled_period_matches_oracle_to_ulps(setup, H):
+    """The one-executable-per-period program re-rounds across phase
+    boundaries; it must stay within float32 ULPs of the oracle (and be
+    bitwise at H=1, where the programs coincide)."""
+    model, prof, opt, data = setup
+    scfg = StepConfig()
+    n = 2 * H
+    rp, _ = _runner(setup, H, scfg=scfg)
+    sp = rp.run(init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                                 cfg=scfg), n, fused=False)
+    rc, _ = _runner(setup, H, scfg=scfg, fused=True, exec_="compiled")
+    sc = rc.run(init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                                 cfg=scfg), n)
+    if H == 1:
+        _assert_tree_equal(sp, sc, "state")
+    else:
+        for a, b in zip(jax.tree_util.tree_leaves(sp),
+                        jax.tree_util.tree_leaves(sc)):
+            np.testing.assert_allclose(np.asarray(a, np.float64),
+                                       np.asarray(b, np.float64),
+                                       rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_replan_mid_period_bitwise(setup):
+    """An elastic/bandwidth replan landing mid-period: the fused path
+    runs per-step to the boundary, swaps the plan, and must stay bitwise
+    with an oracle run doing the same schedule switch."""
+    model, prof, opt, data = setup
+    H = 4
+    plan_a = build_plan("dreamddp", prof, H)
+    plan_b = build_plan("dreamddp", prof.with_bandwidth(1e8), H)
+    assert plan_a.fingerprint() != plan_b.fingerprint()
+    scfg = StepConfig()
+
+    def run_with_switch(fused):
+        r = Runner(model, opt, plan_a, data, step_cfg=scfg,
+                   run_cfg=RunnerConfig(fused_period=fused))
+        s = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+        s = r.run(s, H + 2, fused=fused)          # ends mid-period
+        r.replan(plan_b)
+        s = r.run(s, 2 * H, start_step=H + 2, fused=fused)
+        return s, r
+
+    sp, rp = run_with_switch(False)
+    sf, rf = run_with_switch(True)
+    _assert_tree_equal(sp, sf, "state")
+    assert len(rf.history) == len(rp.history) == 3 * H + 2
+
+
+def test_fused_checkpoint_restart(setup, tmp_path):
+    """Failure injection at period granularity: restore + replay."""
+    model, prof, opt, data = setup
+    scfg = StepConfig()
+    plan = build_plan("dreamddp", prof, 4)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    ck = CheckpointManager(str(tmp_path))
+    r = Runner(model, opt, plan, data, ckpt=ck, step_cfg=scfg,
+               run_cfg=RunnerConfig(ckpt_every=8, fused_period=True))
+    ck.save(0, state, block=True)
+    state = r.run(state, 20, inject_failure_at=11, fused=True)
+    assert r.retries == 1
+    assert len(r.history) >= 20
+    assert int(state.step) == 20
+
+
+@pytest.mark.slow
+def test_fused_checkpoint_restart_equals_uninterrupted(setup, tmp_path):
+    """Replay after a mid-run restore converges on the exact same state
+    as a run that never failed (same steps replayed, same data)."""
+    model, prof, opt, data = setup
+    scfg = StepConfig()
+    plan = build_plan("dreamddp", prof, 4)
+
+    ck = CheckpointManager(str(tmp_path))
+    r1 = Runner(model, opt, plan, data, ckpt=ck, step_cfg=scfg,
+                run_cfg=RunnerConfig(ckpt_every=8, fused_period=True))
+    s0 = init_train_state(model, opt, jax.random.PRNGKey(0), W, cfg=scfg)
+    ck.save(0, s0, block=True)
+    s_fail = r1.run(s0, 16, inject_failure_at=10, fused=True)
+
+    r2, _ = _runner(setup, 4, fused=True)
+    s_ok = r2.run(init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                                   cfg=scfg), 16)
+    _assert_tree_equal(s_ok, s_fail, "state")
+
+
+def test_fused_straggler_requeues_and_makes_up(setup):
+    """A blown period re-queues its sync units; the make-up runs at a
+    later period boundary and clears the queue — under fused=True."""
+    model, prof, opt, data = setup
+    plan = build_plan("dreamddp", prof, 4)
+    scfg = StepConfig()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    r = Runner(model, opt, plan, data, step_cfg=scfg,
+               run_cfg=RunnerConfig(deadline_factor=2.0, min_history=2,
+                                    fused_period=True))
+    # straggle a step inside period 3 (periods 0-2 build the median)
+    r.run(state, 24, inject_straggler_at=(13, 100.0), fused=True)
+    assert r.skipped_syncs >= 1
+    assert not r.pending_units          # make-up ran at a later boundary
+    assert len(r.period_times) == 6
+
+
+def test_fused_respects_default_and_hook_fallback(setup):
+    """fused=None follows RunnerConfig.fused_period but drops to the
+    per-step oracle when an injection hook is supplied."""
+    model, prof, opt, data = setup
+    scfg = StepConfig()
+    r, _ = _runner(setup, 2, scfg=scfg, fused=True)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    state = r.run(state, 4)
+    assert len(r.period_times) == 2     # ran fused
+    r.run(state, 4, start_step=4, inject_straggler_at=(100, 0.0))
+    assert len(r.period_times) == 2     # hook forced the per-step oracle
+
+
+def test_metrics_drain_cadence(setup):
+    """History has one row per step in order under any drain cadence,
+    metrics staying device-resident between drains."""
+    model, prof, opt, data = setup
+    scfg = StepConfig(track_divergence=True)
+    r, _ = _runner(setup, 2, scfg=scfg, fused=True, log_every=3)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    r.run(state, 14)
+    assert [h["step"] for h in r.history] == list(range(14))
+    assert all("loss" in h and "divergence" in h and "time" in h
+               for h in r.history)
+
+
+def test_period_prefetcher_matches_data(setup):
+    model, prof, opt, data = setup
+    for stacked in (True, False):
+        pipe = PeriodPrefetcher(data, 3, stacked=stacked)
+        pipe.prefetch(6)
+        got = pipe.get(6)               # staged hit
+        direct = pipe.get(3)            # cold build
+        for start, batch in ((6, got), (3, direct)):
+            for h in range(3):
+                want = data.batch(start + h)
+                have = jax.tree.map(lambda x, hh=h: x[hh], batch) \
+                    if stacked else batch[h]
+                _assert_tree_equal(want, have, f"period@{start} step {h}")
+
+
+def test_stack_period_batches_layout(setup):
+    model, prof, opt, data = setup
+    stacked = stack_period_batches(data, 4, 2)
+    assert stacked["tokens"].shape == (2, W, 4, 32)
+    _assert_tree_equal(jax.tree.map(lambda x: x[1], stacked),
+                       data.batch(5))
+
+
+def test_run_rejects_unknown_period_exec(setup):
+    model, prof, opt, data = setup
+    r, scfg = _runner(setup, 2, fused=True)
+    r.run_cfg = dataclasses.replace(r.run_cfg, period_exec="bogus")
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+    with pytest.raises(ValueError, match="period_exec"):
+        r.run(state, 2)

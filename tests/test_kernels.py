@@ -119,6 +119,48 @@ def test_paged_ref_matches_contiguous_oracle():
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("slots,nq,nkv,hd,ps,mb", [
+    (3, 4, 2, 32, 8, 4),
+    (2, 4, 4, 16, 16, 2),
+    (4, 8, 1, 8, 8, 8),
+])
+def test_paged_attention_page_skip_bitwise(slots, nq, nkv, hd, ps, mb):
+    """Stopping the innermost page loop at ``ceil(kv_len / page_size)``
+    must be BITWISE identical to scanning all ``max_blocks``: a fully
+    masked page contributes alpha=1 / p=0 to the online softmax, so
+    skipping it (compute + clamped-index DMA) changes nothing.  The
+    ``_paged_case`` lengths are ragged and include single-page,
+    page-boundary and full-stream slots."""
+    from repro.kernels.paged_attention.kernel import paged_attention_fwd
+    q, kp, vp, bt, kv_len = _paged_case(29 + slots, slots, nq, nkv, hd,
+                                        ps, mb, jnp.float32)
+    # sharpen the ragged edge: a one-token slot next to a full stream
+    kv_len = kv_len.at[0].set(1)
+    skip = paged_attention_fwd(q, kp, vp, bt, kv_len, skip_pages=True,
+                               interpret=True)
+    full = paged_attention_fwd(q, kp, vp, bt, kv_len, skip_pages=False,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(skip), np.asarray(full))
+    # and the skipping kernel still matches the gather oracle
+    ref = paged_attention_ref(q, kp, vp, bt, kv_len)
+    np.testing.assert_allclose(np.asarray(skip), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_page_skip_windowed_bitwise():
+    """Skip + sliding window compose: trailing pages are skipped, the
+    window mask still clips the leading ones."""
+    from repro.kernels.paged_attention.kernel import paged_attention_fwd
+    q, kp, vp, bt, kv_len = _paged_case(7, 3, 4, 2, 16, 8, 4,
+                                        jnp.float32)
+    kw = dict(window=5, interpret=True)
+    skip = paged_attention_fwd(q, kp, vp, bt, kv_len, skip_pages=True,
+                               **kw)
+    full = paged_attention_fwd(q, kp, vp, bt, kv_len, skip_pages=False,
+                               **kw)
+    np.testing.assert_array_equal(np.asarray(skip), np.asarray(full))
+
+
 def test_paged_trash_page_contents_never_leak():
     """Poisoning the trash page (and every unreferenced page) with huge
     values must not change the output — masking happens before the
