@@ -1,5 +1,5 @@
 .PHONY: test test-all test-fast bench sim serve-bench train-bench \
-	iteration-bench lint kernels-test check-bench ci
+	iteration-bench lint repro-lint kernels-test check-bench ci
 
 # Every target preserves an existing PYTHONPATH (same idiom as
 # scripts/ci.sh) instead of clobbering it.
@@ -43,14 +43,22 @@ sim:
 # ---------------------------------------------------------------- CI tiers
 # The same steps .github/workflows/ci.yml runs, executable locally.
 
-# Syntax gate everywhere; style gate only where a linter is installed
+# Syntax gate + style gate + JAX-aware hazard rules (repro.lint).
+# Ruff is required: a missing linter fails loudly instead of silently
+# degrading, so `make lint` locally means exactly what CI's lint job
+# means.
 lint:
 	python -m compileall -q src tests benchmarks scripts examples
-	@if command -v ruff >/dev/null 2>&1; then \
-		ruff check src tests benchmarks scripts examples; \
-	else \
-		echo "ruff not installed; compileall-only lint"; \
-	fi
+	@command -v ruff >/dev/null 2>&1 || { \
+		echo "error: ruff is not installed (pip install ruff);" \
+		     "refusing to degrade to compileall-only lint" >&2; \
+		exit 1; }
+	ruff check src tests benchmarks scripts examples
+	$(PY_PATH) python -m repro.lint src/repro --baseline .repro-lint-baseline.json
+
+# The JAX-aware rules alone (no ruff needed; pure stdlib)
+repro-lint:
+	$(PY_PATH) python -m repro.lint src/repro --baseline .repro-lint-baseline.json
 
 # Pallas kernel parity sweeps (interpret mode vs pure-jnp oracles)
 kernels-test:

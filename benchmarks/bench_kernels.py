@@ -57,7 +57,7 @@ def run(csv: bool = True) -> list[dict]:
     fused_bytes = n * (2 + 4 * 3) + n * (2 + 4 * 2)
     unfused_bytes = fused_bytes + n * 4 * 6      # extra temps materialized
     rows.append({"kernel": "fused_adam_sync",
-                 "max_err": max(_err(a, b) for a, b in zip(got, want)),
+                 "max_err": max(_err(a, b) for a, b in zip(got, want, strict=True)),
                  "hbm_bytes": fused_bytes, "naive_bytes": unfused_bytes,
                  "v5e_us": fused_bytes / _HBM * 1e6,
                  "v5e_us_naive": unfused_bytes / _HBM * 1e6})

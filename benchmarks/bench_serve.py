@@ -123,9 +123,9 @@ def run_case(model, params, *, n_requests, short_len, long_len, gen,
     _naive_pass(loop, prompts, gen, max_batch)
     naive_pre, naive_dec = zip(*(_naive_pass(loop, prompts, gen,
                                              max_batch)
-                                 for _ in range(REPEATS)))
+                                 for _ in range(REPEATS)), strict=True)
     naive_dec_s, naive_wall = min(naive_dec), min(
-        p + d for p, d in zip(naive_pre, naive_dec))
+        p + d for p, d in zip(naive_pre, naive_dec, strict=True))
 
     # ---- engine (warm, then best of REPEATS)
     engine = ServeEngine(
@@ -134,7 +134,7 @@ def run_case(model, params, *, n_requests, short_len, long_len, gen,
                      max_seq=long_len + gen,
                      decode_block=decode_block))
     reqs = [Request(tokens=p, max_new_tokens=gen, eos_id=e)
-            for p, e in zip(prompts, eos_ids)]
+            for p, e in zip(prompts, eos_ids, strict=True)]
     eng_dec, eng_wall_all, comps = [], [], None
     engine.generate(list(reqs))
     for _ in range(REPEATS):
@@ -145,7 +145,7 @@ def run_case(model, params, *, n_requests, short_len, long_len, gen,
         eng_dec.append(engine.stats.decode_time_s)
         # goodput sanity: greedy equivalence means the engine generates
         # exactly the useful tokens
-        for c, u, r in zip(comps, useful, refs):
+        for c, u, r in zip(comps, useful, refs, strict=True):
             assert c.tokens == r[:u], "engine/naive divergence in bench"
         assert engine.stats.decode_tokens == useful_decode
     engine_dec_s, engine_wall = min(eng_dec), min(eng_wall_all)

@@ -51,7 +51,7 @@ def resnet_layers(depth: int, batch: int):
     out.append(("stem", p + 128, batch * f))
     cin = 64
     hw = 32
-    for s, (n, w) in enumerate(zip(blocks, widths)):
+    for s, (n, w) in enumerate(zip(blocks, widths, strict=True)):
         if s > 0:
             hw //= 2
         for b in range(n):

@@ -112,7 +112,7 @@ def _pair_rows(problems, name, base_rows, fresh_rows):
         _fail(problems, f"{name}: baseline has {len(base_rows)} rows, "
                         f"fresh has {len(fresh_rows)} — stale baseline?")
         return []
-    return list(zip(base_rows, fresh_rows))
+    return list(zip(base_rows, fresh_rows, strict=True))
 
 
 def _check_section(problems, where, b, f, *, exact, exact_nested,

@@ -1,0 +1,18 @@
+#!/usr/bin/env python3
+"""Run the repro.lint static analyzer from the repo root.
+
+Equivalent to ``PYTHONPATH=src python -m repro.lint ...`` — this
+wrapper just puts the src layout on sys.path so it works from a bare
+checkout (the CI lint job runs before dependencies are installed;
+repro.lint is stdlib-only by design).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.lint.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

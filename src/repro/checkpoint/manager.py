@@ -151,7 +151,7 @@ class CheckpointManager:
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         out = []
-        for path, leaf in flat:
+        for path, _leaf in flat:
             key = "/".join(_path_str(p) for p in path)
             if key not in by_key:
                 raise KeyError(f"checkpoint missing leaf {key!r}")

@@ -32,7 +32,7 @@ def fused_adamw_tree(params, grads, ms, vs, lr, step, **kw):
     flat_m = treedef.flatten_up_to(ms)
     flat_v = treedef.flatten_up_to(vs)
     out_p, out_m, out_v = [], [], []
-    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=True):
         p2, m2, v2 = fused_adamw_step(p, g, m, v, lr, step, **kw)
         out_p.append(p2)
         out_m.append(m2)

@@ -33,7 +33,7 @@ def _load_trace(path: str, vocab: int, rng) -> list[dict]:
         trace = json.load(f)
     if not isinstance(trace, list):
         raise ValueError(f"{path}: expected a JSON list of request dicts")
-    for i, r in enumerate(trace):
+    for r in trace:
         if "tokens" not in r:
             n = int(r.get("prompt_len", 8))
             r["tokens"] = rng.randint(0, vocab, size=n).tolist()

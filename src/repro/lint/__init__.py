@@ -1,0 +1,20 @@
+"""repro.lint — JAX-aware static analysis for this repo's invariants.
+
+Pure stdlib (``ast``): importing this package never imports jax, so the
+linter runs in bare CI containers.  Entry points::
+
+    python -m repro.lint src/repro          # CLI (scripts/lint.py wraps)
+    from repro.lint import lint_text        # test / tooling API
+    from repro.lint import hot_path         # runtime hot-path marker
+
+Rule catalogue and suppression syntax: ``src/repro/lint/README.md``.
+"""
+
+from .engine import lint_paths, lint_text
+from .findings import ERROR, WARNING, Finding
+from .hotpath import EXTRA_HOT_PATHS, hot_path
+from .registry import Rule, all_rules, register
+
+__all__ = ["lint_paths", "lint_text", "Finding", "ERROR", "WARNING",
+           "hot_path", "EXTRA_HOT_PATHS", "Rule", "all_rules",
+           "register"]

@@ -1,0 +1,40 @@
+"""Hot-path marking: the contract between runtime code and HOST-SYNC.
+
+Functions on a dispatch-overlap-critical path (the fused period loop,
+the serve decode tick, the prefetcher) are marked with :func:`hot_path`.
+The HOST-SYNC and RECOMPILE rules only police marked functions, so the
+rest of the codebase can ``float()`` metrics freely — the analyzer's job
+is to keep *implicit* device syncs out of exactly the regions whose
+performance depends on async dispatch (see runtime/DESIGN.md).
+
+The decorator is a pure annotation — zero runtime overhead, no wrapper
+frame — detected *statically* by the analyzer (any decorator whose
+dotted name ends in ``hot_path``).  ``EXTRA_HOT_PATHS`` covers functions
+that cannot carry a decorator (generated code, third-party subclass
+overrides): add ``"<module>:<qualname>"`` entries, e.g.
+``"repro.runtime.runner:Runner._run_fused"``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+# "<dotted.module>:<qualname>" entries for functions that can't be
+# decorated.  Checked by the engine next to the decorator scan.
+EXTRA_HOT_PATHS: frozenset[str] = frozenset()
+
+
+def hot_path(fn: F) -> F:
+    """Mark ``fn`` as dispatch-overlap critical.
+
+    Inside a hot function the analyzer rejects implicit device syncs
+    (``np.asarray`` / ``float()`` / ``.item()`` / ``.tolist()`` /
+    ``print`` of device values) and per-call ``jax.jit``.  Intentional
+    syncs use the explicit forms — ``jax.block_until_ready`` /
+    ``jax.device_get`` — or a ``# repro-lint: disable=HOST-SYNC``
+    pragma with a justification.
+    """
+    fn.__repro_hot_path__ = True
+    return fn

@@ -1,0 +1,4 @@
+"""Rule modules — importing this package registers every rule."""
+
+from . import (donation, host_sync, key_reuse, pallas,  # noqa: F401
+               recompile, sim_determinism)

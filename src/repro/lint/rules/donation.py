@@ -1,0 +1,107 @@
+"""DONATE: use of a buffer after passing it to a donating executable.
+
+``jax.jit(fn, donate_argnums=...)`` invalidates the donated operand's
+buffers the moment the call is dispatched — a later read returns
+garbage or raises, and on the fused training path the read also forces
+a defensive copy that defeats the donation.  The canonical safe shape
+is the rebind: ``state, m = step(state, batch)``.
+
+The rule tracks executables created in the same module via
+``g = jax.jit(f, donate_argnums=...)`` (plain-name or ``self.x``
+targets) and then linearly scans each scope: after ``g(x)`` donates
+``x``, any read of ``x`` before a rebind is flagged.  Loop bodies are
+scanned twice so a donation at the bottom of iteration *n* catches the
+read at the top of iteration *n+1*.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .. import astutil
+from ..engine import ModuleContext
+from ..findings import Finding
+from ..registry import Rule, register
+
+
+def _donating_callables(ctx: ModuleContext) -> dict[str, tuple[int, ...]]:
+    """Dotted callable name (``g`` / ``self._step``) -> donated
+    positional indices."""
+    out: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and ctx.resolve(node.value.func) in ("jax.jit",
+                                                     "jax.pmap")):
+            continue
+        kw = astutil.keyword(node.value, "donate_argnums")
+        if kw is None:
+            continue
+        positions = astutil.int_tuple(kw)
+        if not positions:
+            continue
+        for t in node.targets:
+            dotted = astutil.dotted(t, {})
+            if dotted:
+                out[dotted] = positions
+    return out
+
+
+@register
+class DonationRule(Rule):
+    name = "DONATE"
+    summary = ("argument read after being passed to a donate_argnums "
+               "executable (use-after-donate)")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        donors = _donating_callables(ctx)
+        if not donors:
+            return
+        scopes: list[list[ast.stmt]] = [ctx.tree.body]
+        scopes += [info.node.body for info in ctx.functions]
+        for body in scopes:
+            yield from self._scan_scope(body, donors, ctx)
+
+    def _scan_scope(self, body: list[ast.stmt],
+                    donors: dict[str, tuple[int, ...]],
+                    ctx: ModuleContext) -> Iterable[Finding]:
+        dead: dict[str, tuple[str, int]] = {}      # name -> (callee, line)
+        flagged: set[int] = set()
+        for stmt in astutil.iter_statements(body, unroll_loops=2):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            donated_args: list[tuple[ast.Name, str]] = []
+            for call in astutil.stmt_nodes(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                callee = astutil.dotted(call.func, {})
+                if callee not in donors:
+                    continue
+                for pos in donors[callee]:
+                    if pos < len(call.args) \
+                            and isinstance(call.args[pos], ast.Name):
+                        donated_args.append((call.args[pos], callee))
+            # reads of names killed by an EARLIER statement (`dead` is
+            # updated below, so a statement's own donation occurrences
+            # never see their own kill — the rebind idiom stays clean,
+            # while re-donating an already-dead buffer is flagged)
+            for node in astutil.stmt_nodes(stmt):
+                if isinstance(node, ast.Name) \
+                        and isinstance(node.ctx, ast.Load) \
+                        and node.id in dead \
+                        and id(node) not in flagged:
+                    flagged.add(id(node))
+                    callee, line = dead[node.id]
+                    yield self.finding(
+                        ctx, node,
+                        f"`{node.id}` is read after being donated to "
+                        f"`{callee}` (line {line}); donated buffers are "
+                        "invalid after dispatch — rebind the result "
+                        "(`x, ... = fn(x, ...)`) or copy before the call")
+            for name_node, callee in donated_args:
+                dead.setdefault(name_node.id,
+                                (callee, name_node.lineno))
+            for rebound in astutil.assign_target_names(stmt):
+                dead.pop(rebound, None)

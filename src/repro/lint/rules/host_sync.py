@@ -1,0 +1,183 @@
+"""HOST-SYNC: implicit device synchronization inside hot-path functions.
+
+DreamDDP's overlap argument (and the serve engine's goodput) rests on
+async dispatch: the host queues a whole period / decode block and syncs
+ONCE at the boundary.  Any implicit transfer inside the hot region —
+``np.asarray(x)``, ``float(x)``, ``x.item()``, ``x.tolist()``,
+``print(x)`` on a device value — silently blocks the host mid-period
+and serializes exactly the communication the scheduler planned to hide.
+
+The rule polices only functions marked with ``@hot_path``
+(:mod:`repro.lint.hotpath`).  The *explicit* sync forms —
+``jax.block_until_ready`` and ``jax.device_get`` — are the blessed
+escape hatches: one deliberate, batched transfer per drain point.
+Values produced by ``jax.device_get`` (and taints derived from them)
+are tracked as host-side, so post-drain ``float()`` conversion of
+already-materialized metrics does not fire.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .. import astutil
+from ..engine import ModuleContext
+from ..findings import Finding, WARNING
+from ..registry import Rule, register
+
+DEVICE, HOST, UNKNOWN = "device", "host", "unknown"
+
+# Calls whose result is host-resident (or plain Python).
+_HOST_CALLS = {
+    "jax.device_get", "numpy.asarray", "numpy.array", "numpy.shape",
+    "float", "int", "bool", "str", "len", "range", "enumerate", "sorted",
+    "list", "tuple", "dict", "set", "min", "max", "sum", "abs", "zip",
+    "time.perf_counter", "time.monotonic", "time.time", "isinstance",
+    "getattr", "hasattr", "repr",
+}
+# Implicit syncs that are flagged regardless of provenance: in this
+# codebase a hot-path numpy materialization is always a device read.
+_ALWAYS_SYNC = {"numpy.asarray", "numpy.array"}
+_SYNC_METHODS = {"item", "tolist"}
+_CONVERSIONS = {"float", "int", "bool"}
+
+_SUPPRESS = ("; make it explicit and batched (one jax.device_get / "
+             "jax.block_until_ready per drain), move it off the hot "
+             "path, or add `# repro-lint: disable=HOST-SYNC -- why`")
+
+
+def _classify(node: ast.AST, env: dict[str, str],
+              ctx: ModuleContext) -> str:
+    """HOST / DEVICE / UNKNOWN provenance of an expression, given the
+    per-function name environment.  Conservative: unresolvable calls in
+    a hot function are presumed to return device values (they are
+    usually jitted executables)."""
+    if isinstance(node, ast.Constant):
+        return HOST
+    if isinstance(node, ast.Name):
+        return env.get(node.id, UNKNOWN)
+    if isinstance(node, (ast.Subscript, ast.Attribute, ast.Starred)):
+        root = astutil.root_name(node)
+        if root is not None:
+            return env.get(root, UNKNOWN)
+        return UNKNOWN
+    if isinstance(node, ast.Call):
+        dot = ctx.resolve(node.func)
+        if dot in _HOST_CALLS:
+            return HOST
+        if dot is not None:
+            root = dot.split(".")[0]
+            if dot.startswith("jax.") or root == "jax":
+                return DEVICE
+            if root in ("numpy", "math", "time", "itertools",
+                        "functools", "operator", "collections",
+                        "statistics"):
+                return HOST
+            if root in env:                 # method of / call through a
+                base = env[root]            # locally-classified value
+                return DEVICE if base == UNKNOWN else base
+        # self._jitted_step(...), steps[h](...), project helpers: in a
+        # hot function, presume an unrecognized callable returns device
+        # values — that's what hot paths dispatch
+        return DEVICE
+    if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare, ast.UnaryOp,
+                         ast.IfExp, ast.Tuple, ast.List, ast.Dict,
+                         ast.JoinedStr, ast.FormattedValue)):
+        kinds = [_classify(c, env, ctx) for c in ast.iter_child_nodes(node)
+                 if isinstance(c, ast.expr)]
+        if DEVICE in kinds:
+            return DEVICE
+        if kinds and all(k == HOST for k in kinds):
+            return HOST
+        return UNKNOWN
+    return UNKNOWN
+
+
+def _build_env(fn: ast.AST, ctx: ModuleContext) -> dict[str, str]:
+    """One forward pass (source order, control flow ignored) assigning
+    HOST/DEVICE provenance to local names."""
+    env: dict[str, str] = {}
+    nodes: list[ast.AST] = sorted(
+        astutil.walk_no_nested_functions(fn),
+        key=lambda n: (getattr(n, "lineno", 0),
+                       getattr(n, "col_offset", 0)))
+    for node in nodes:
+        if isinstance(node, ast.Assign):
+            kind = _classify(node.value, env, ctx)
+            for name in astutil.assign_target_names(node):
+                env[name] = kind
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name):
+                env[node.target.id] = _classify(node.value, env, ctx)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            kind = _classify(node.iter, env, ctx)
+            for name in astutil.assign_target_names(node):
+                env[name] = kind
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for comp in node.generators:
+                kind = _classify(comp.iter, env, ctx)
+                for t in ast.walk(comp.target):
+                    if isinstance(t, ast.Name):
+                        env[t.id] = kind
+    return env
+
+
+@register
+class HostSyncRule(Rule):
+    name = "HOST-SYNC"
+    summary = ("implicit device sync (np.asarray / float / .item / "
+               ".tolist / print of a device value) inside a @hot_path "
+               "function")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for info in ctx.hot_functions():
+            env = _build_env(info.node, ctx)
+            for node in astutil.walk_no_nested_functions(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                yield from self._check_call(node, env, ctx)
+            # nested defs inside a hot function run on the same path
+            for node in ast.walk(info.node):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and node is not info.node:
+                    nested_env = _build_env(node, ctx)
+                    for sub in astutil.walk_no_nested_functions(node):
+                        if isinstance(sub, ast.Call):
+                            yield from self._check_call(sub, nested_env,
+                                                        ctx)
+
+    def _check_call(self, node: ast.Call, env: dict[str, str],
+                    ctx: ModuleContext) -> Iterable[Finding]:
+        dot = ctx.resolve(node.func)
+        if dot in _ALWAYS_SYNC:
+            yield self.finding(
+                ctx, node,
+                f"`{dot}` in a hot path forces a blocking device->host "
+                f"read per call{_SUPPRESS}")
+            return
+        if dot == "print":
+            args = [a for a in node.args
+                    if _classify(a, env, ctx) != HOST]
+            if args:
+                yield self.finding(
+                    ctx, node,
+                    "`print` of a possibly-device value blocks dispatch "
+                    f"in a hot path{_SUPPRESS}", severity=WARNING)
+            return
+        if dot in _CONVERSIONS and len(node.args) == 1:
+            if _classify(node.args[0], env, ctx) == DEVICE:
+                yield self.finding(
+                    ctx, node,
+                    f"`{dot}()` of a device value is an implicit "
+                    f"blocking transfer in a hot path{_SUPPRESS}")
+            return
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS and not node.args:
+            if _classify(node.func.value, env, ctx) != HOST:
+                yield self.finding(
+                    ctx, node,
+                    f"`.{node.func.attr}()` synchronously materializes "
+                    f"a device value in a hot path{_SUPPRESS}")

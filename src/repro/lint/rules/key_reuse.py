@@ -1,0 +1,110 @@
+"""KEY-REUSE: the same PRNG key consumed by more than one primitive.
+
+JAX keys are not stateful: feeding one key to two primitives gives
+*correlated* streams (identical, for the same primitive), which is how
+"random" dropout masks end up equal across layers and sampled tokens
+repeat across slots.  Every consumption must be preceded by a fresh
+``jax.random.split`` / ``fold_in``.
+
+The rule tracks, per function scope, names bound from
+``jax.random.PRNGKey`` / ``key`` / ``split`` / ``fold_in`` (including
+tuple unpacking and constant-index subscripts of split results) and
+flags the second consumption of the same key identity without an
+intervening rebind.  Consumption = the key appearing as an argument to
+any call (``jax.random.*`` primitives, jitted closures, samplers — all
+consume).  Loop bodies are scanned twice, so a key defined outside a
+loop and consumed inside it without a per-iteration split is caught.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .. import astutil
+from ..engine import ModuleContext
+from ..findings import Finding
+from ..registry import Rule, register
+
+_KEY_SOURCES = {"jax.random.PRNGKey", "jax.random.key",
+                "jax.random.split", "jax.random.fold_in",
+                "jax.random.wrap_key_data"}
+_KEY_KWARGS = {"key", "rng", "prng_key", "seed_key"}
+
+
+def _key_identity(node: ast.AST, keys: set[str]) -> str | None:
+    """A trackable key identity: a known key name, or a constant-index
+    subscript of one (``keys[0]``).  Slices and computed indices are
+    untracked (conservatively silent)."""
+    if isinstance(node, ast.Name) and node.id in keys:
+        return node.id
+    if isinstance(node, ast.Subscript) \
+            and isinstance(node.value, ast.Name) \
+            and node.value.id in keys:
+        idx = node.slice
+        if isinstance(idx, ast.Constant) and isinstance(idx.value, int):
+            return f"{node.value.id}[{idx.value}]"
+    return None
+
+
+@register
+class KeyReuseRule(Rule):
+    name = "KEY-REUSE"
+    summary = ("the same PRNGKey / split result consumed twice without "
+               "an intervening split")
+
+    # parameters with these names are presumed to be PRNG keys even
+    # though no jax.random call binds them in this scope
+    PARAM_KEY_NAMES = frozenset({"key", "rng", "prng_key", "rng_key"})
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for info in ctx.functions:
+            seed = set(astutil.param_names(info.node)) \
+                & self.PARAM_KEY_NAMES
+            yield from self._scan(info.node.body, ctx, seed)
+        yield from self._scan(ctx.tree.body, ctx, set())
+
+    def _scan(self, body: list[ast.stmt], ctx: ModuleContext,
+              seed_keys: set[str]) -> Iterable[Finding]:
+        keys: set[str] = set(seed_keys)
+        consumed: dict[str, int] = {}          # identity -> first line
+        flagged: set[int] = set()
+        for stmt in astutil.iter_statements(body, unroll_loops=2):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for call in astutil.stmt_nodes(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                dot = ctx.resolve(call.func)
+                is_random = dot is not None \
+                    and dot.startswith("jax.random.")
+                args = list(call.args) + [
+                    kw.value for kw in call.keywords
+                    if kw.arg is None or kw.arg in _KEY_KWARGS
+                    or is_random]
+                for arg in args:
+                    ident = _key_identity(arg, keys)
+                    if ident is None:
+                        continue
+                    if ident in consumed and id(arg) not in flagged:
+                        flagged.add(id(arg))
+                        yield self.finding(
+                            ctx, arg,
+                            f"PRNG key `{ident}` is consumed again "
+                            f"(first consumed line {consumed[ident]}) "
+                            "without an intervening jax.random.split — "
+                            "the two streams are correlated")
+                    consumed.setdefault(ident, arg.lineno)
+            # (re)binds: fresh keys from key sources; any rebind clears
+            # the consumption record for that name and its subscripts
+            targets = astutil.assign_target_names(stmt)
+            value = stmt.value if isinstance(stmt, ast.Assign) else None
+            is_key_bind = isinstance(value, ast.Call) and \
+                ctx.resolve(value.func) in _KEY_SOURCES
+            for name in targets:
+                for ident in [c for c in consumed
+                              if c == name or c.startswith(f"{name}[")]:
+                    del consumed[ident]
+                if is_key_bind:
+                    keys.add(name)

@@ -1,0 +1,254 @@
+"""PALLAS: kernel-module hazards around ``pl.pallas_call``.
+
+Three checks, all scoped to modules that import
+``jax.experimental.pallas`` (in this repo: ``src/repro/kernels/*/``):
+
+* **index_map arity** — every ``BlockSpec`` index_map must take one
+  argument per grid dimension, *plus* one per scalar-prefetch operand
+  when the call uses ``pltpu.PrefetchScalarGridSpec`` (the scalar refs
+  are prepended to the index-map signature).  An arity mismatch maps
+  boundary blocks to the wrong pages and is invisible until a
+  real-shape run.
+* **out dtype** — a store into an output ref whose ``.astype`` dtype
+  contradicts the literal dtype declared in ``out_shape`` truncates
+  silently in interpret mode and miscompiles on Mosaic.
+* **grid-position branches** — Python ``if``/``while`` on
+  ``pl.program_id`` / ``pl.num_programs`` (directly or via a local
+  binding) inside a kernel body: grid positions are traced, so the
+  branch either fails or applies to every grid step; boundary
+  loads/stores must be predicated with ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .. import astutil
+from ..engine import ModuleContext
+from ..findings import Finding, WARNING
+from ..registry import Rule, register
+
+_PALLAS = "jax.experimental.pallas"
+_GRID_FNS = ("program_id", "num_programs")
+
+_DTYPE_NAMES = {
+    "jax.numpy.float32": "float32", "jax.numpy.float16": "float16",
+    "jax.numpy.bfloat16": "bfloat16", "jax.numpy.int8": "int8",
+    "jax.numpy.int32": "int32", "jax.numpy.uint32": "uint32",
+    "jax.numpy.float64": "float64", "jax.numpy.int16": "int16",
+    "numpy.float32": "float32", "numpy.int8": "int8",
+    "numpy.int32": "int32", "numpy.float16": "float16",
+}
+
+
+def _literal_dtype(node: ast.AST | None, ctx: ModuleContext) -> str | None:
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    dot = ctx.resolve(node)
+    return _DTYPE_NAMES.get(dot) if dot else None
+
+
+def _local_assignments(ctx: ModuleContext) -> dict[str, ast.AST]:
+    """name -> last assigned value expression (module + function scopes;
+    best effort for resolving ``grid=grid`` style indirection)."""
+    out: dict[str, ast.AST] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value
+    return out
+
+
+class _CallInfo:
+    """Resolved shape of one pallas_call: grid rank, scalar-prefetch
+    count, specs, out_shape entries, kernel def."""
+
+    def __init__(self, call: ast.Call, ctx: ModuleContext,
+                 assigns: dict[str, ast.AST],
+                 defs: dict[str, ast.AST]):
+        self.call = call
+        self.rank: int | None = None
+        self.n_scalar = 0
+        self.specs: list[ast.Call] = []
+        self.out_shapes: list[ast.Call] = []
+        self.kernel: ast.AST | None = None
+
+        def deref(node: ast.AST | None) -> ast.AST | None:
+            if isinstance(node, ast.Name):
+                return assigns.get(node.id)
+            return node
+
+        grid_src = call
+        spec = deref(astutil.keyword(call, "grid_spec"))
+        if isinstance(spec, ast.Call) and (ctx.resolve(spec.func) or "") \
+                .endswith("PrefetchScalarGridSpec"):
+            grid_src = spec
+            n = astutil.keyword(spec, "num_scalar_prefetch")
+            if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                self.n_scalar = n.value
+        grid = deref(astutil.keyword(grid_src, "grid"))
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            self.rank = len(grid.elts)
+        elif isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+            self.rank = 1
+
+        for kw_name in ("in_specs", "out_specs"):
+            val = deref(astutil.keyword(grid_src, kw_name))
+            items = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+                else [val] if val is not None else []
+            for item in items:
+                if isinstance(item, ast.Call) and \
+                        (ctx.resolve(item.func) or "").endswith("BlockSpec"):
+                    self.specs.append(item)
+        self.n_in, self.n_out = self._spec_counts(grid_src, deref, ctx)
+
+        out_shape = deref(astutil.keyword(call, "out_shape"))
+        items = out_shape.elts \
+            if isinstance(out_shape, (ast.Tuple, ast.List)) \
+            else [out_shape] if out_shape is not None else []
+        self.out_shapes = [
+            i for i in items if isinstance(i, ast.Call)
+            and (ctx.resolve(i.func) or "").endswith("ShapeDtypeStruct")]
+
+        if call.args:
+            k = call.args[0]
+            if isinstance(k, ast.Name):
+                self.kernel = defs.get(k.id)
+            elif isinstance(k, (ast.FunctionDef, ast.Lambda)):
+                self.kernel = k
+
+    @staticmethod
+    def _spec_counts(grid_src, deref, ctx) -> tuple[int, int]:
+        counts = []
+        for kw_name in ("in_specs", "out_specs"):
+            val = deref(astutil.keyword(grid_src, kw_name))
+            if isinstance(val, (ast.Tuple, ast.List)):
+                counts.append(len(val.elts))
+            elif val is not None:
+                counts.append(1)
+            else:
+                counts.append(0)
+        return counts[0], counts[1]
+
+
+@register
+class PallasRule(Rule):
+    name = "PALLAS"
+    summary = ("BlockSpec index_map arity vs grid rank, out_shape dtype "
+               "mismatches, Python branches on pl.program_id")
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return any(v.startswith(_PALLAS) for v in ctx.aliases.values())
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        assigns = _local_assignments(ctx)
+        defs = {info.node.name: info.node for info in ctx.functions}
+        for call in ast.walk(ctx.tree):
+            if not (isinstance(call, ast.Call)
+                    and (ctx.resolve(call.func) or "")
+                    .endswith("pallas_call")):
+                continue
+            info = _CallInfo(call, ctx, assigns, defs)
+            yield from self._check_arity(info, ctx, assigns)
+            yield from self._check_dtypes(info, ctx)
+        # grid-position branches: any function in a pallas module that
+        # touches program_id/num_programs is kernel code, whether or not
+        # this module also holds its pallas_call site
+        for fn_info in ctx.functions:
+            yield from self._check_grid_branches(fn_info.node, ctx)
+
+    # ------------------------------------------------------ index_map arity
+    def _check_arity(self, info: _CallInfo, ctx: ModuleContext,
+                     assigns: dict[str, ast.AST]) -> Iterable[Finding]:
+        if info.rank is None:
+            return
+        expected = info.rank + info.n_scalar
+        for spec in info.specs:
+            imap = spec.args[1] if len(spec.args) > 1 \
+                else astutil.keyword(spec, "index_map")
+            if isinstance(imap, ast.Name):
+                imap = assigns.get(imap.id, imap)
+            if not isinstance(imap, (ast.Lambda, ast.FunctionDef)):
+                continue
+            arity = len(astutil.param_names(imap))
+            if arity != expected:
+                extra = (f" + {info.n_scalar} scalar-prefetch ref(s)"
+                         if info.n_scalar else "")
+                yield self.finding(
+                    ctx, spec,
+                    f"BlockSpec index_map takes {arity} argument(s) but "
+                    f"the grid has rank {info.rank}{extra} (expected "
+                    f"{expected}); boundary blocks will be mapped to the "
+                    "wrong slabs")
+
+    # ------------------------------------------------------------- dtypes
+    def _check_dtypes(self, info: _CallInfo, ctx: ModuleContext
+                      ) -> Iterable[Finding]:
+        if info.kernel is None or not info.out_shapes:
+            return
+        declared: list[str | None] = []
+        for sds in info.out_shapes:
+            dt = sds.args[1] if len(sds.args) > 1 \
+                else astutil.keyword(sds, "dtype")
+            declared.append(_literal_dtype(dt, ctx))
+        if not any(declared):
+            return
+        params = astutil.param_names(info.kernel)
+        lo = info.n_scalar + info.n_in
+        out_params = params[lo:lo + len(declared)]
+        by_name = dict(zip(out_params, declared, strict=False))
+        for node in ast.walk(info.kernel):
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Subscript)
+                    and isinstance(node.targets[0].value, ast.Name)):
+                continue
+            ref = node.targets[0].value.id
+            want = by_name.get(ref)
+            if want is None:
+                continue
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr == "astype" and sub.args:
+                    got = _literal_dtype(sub.args[0], ctx)
+                    if got is not None and got != want:
+                        yield self.finding(
+                            ctx, node,
+                            f"kernel stores {got} into `{ref}` but "
+                            f"out_shape declares {want}; the value is "
+                            "silently converted at the ref boundary",
+                            severity=WARNING)
+
+    # ------------------------------------------------- pl.when vs Python if
+    def _check_grid_branches(self, kernel: ast.AST, ctx: ModuleContext
+                             ) -> Iterable[Finding]:
+        grid_names: set[str] = set()
+        for node in astutil.walk_no_nested_functions(kernel):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                dot = ctx.resolve(node.value.func) or ""
+                if dot.endswith(_GRID_FNS):
+                    grid_names.update(astutil.assign_target_names(node))
+        for node in astutil.walk_no_nested_functions(kernel):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            hit = None
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.Call):
+                    dot = ctx.resolve(sub.func) or ""
+                    if dot.endswith(_GRID_FNS):
+                        hit = dot.rsplit(".", 1)[-1]
+                elif isinstance(sub, ast.Name) and sub.id in grid_names:
+                    hit = sub.id
+            if hit is not None:
+                yield self.finding(
+                    ctx, node,
+                    f"Python branch on grid position `{hit}` inside a "
+                    "Pallas kernel is evaluated at trace time, not per "
+                    "grid step; predicate boundary loads/stores with "
+                    "pl.when")

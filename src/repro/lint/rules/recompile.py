@@ -1,0 +1,186 @@
+"""RECOMPILE: constructs that re-trace or re-compile on the hot path.
+
+Three hazard shapes this stack has actually hit:
+
+* ``jax.jit`` (or ``jax.pmap``) called inside a ``for``/``while`` loop
+  or inside a ``@hot_path`` function — every call makes a *new* jitted
+  callable with an empty cache, so every call re-traces.  Executables
+  must be built once and cached (the engine/runner pattern: build in
+  ``__init__`` / ``_build_steps``, call in the loop).  Building a list
+  of executables ONCE via a comprehension is fine and not flagged.
+* Python ``if``/``while`` on a traced argument inside a jit-compiled
+  function — fails at trace time (TracerBoolConversionError) or, when
+  the value is marked static, recompiles per distinct value.  Shape/
+  dtype attribute branches and ``is None`` checks are static and
+  exempt; so are ``static_argnames``/``static_argnums`` parameters.
+* Unhashable static arguments: a call site passing a ``list``/``dict``/
+  ``set`` literal at a position the executable declared static raises
+  at runtime; caught here at lint time.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .. import astutil
+from ..engine import ModuleContext
+from ..findings import Finding, WARNING
+from ..registry import Rule, register
+
+_JIT = {"jax.jit", "jax.pmap"}
+# attribute reads on a traced value that produce static python values
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _jit_static_params(call: ast.Call, fn: ast.AST | None
+                       ) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    nums = astutil.int_tuple(astutil.keyword(call, "static_argnums")
+                             or ast.Tuple(elts=[])) or ()
+    names = astutil.str_tuple(astutil.keyword(call, "static_argnames")
+                              or ast.Tuple(elts=[])) or ()
+    if fn is not None and nums:
+        params = astutil.param_names(fn)
+        names = names + tuple(params[i] for i in nums if i < len(params))
+    return nums, names
+
+
+def _jit_decorator(fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                   ctx: ModuleContext) -> ast.Call | None | bool:
+    """jit decoration of ``fn``: the decorating Call (to read static
+    args), True for a bare ``@jax.jit``, None if not jitted."""
+    for dec in fn.decorator_list:
+        if ctx.resolve(dec) in _JIT:
+            return True
+        if isinstance(dec, ast.Call):
+            dot = ctx.resolve(dec.func)
+            if dot in _JIT:
+                return dec
+            if dot in ("functools.partial", "partial") and dec.args \
+                    and ctx.resolve(dec.args[0]) in _JIT:
+                return dec
+    return None
+
+
+@register
+class RecompileRule(Rule):
+    name = "RECOMPILE"
+    summary = ("jax.jit per call site (in a loop / hot path), Python "
+               "branches on traced arguments, unhashable static args")
+
+    def check(self, ctx: ModuleContext) -> Iterable[Finding]:
+        yield from self._jit_call_sites(ctx)
+        yield from self._traced_branches(ctx)
+        yield from self._unhashable_statics(ctx)
+
+    # -------------------------------------------------- jit-in-loop/hot-path
+    def _jit_call_sites(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for call in ctx.calls(*_JIT):
+            fn = astutil.enclosing_function(call)
+            if astutil.enclosing_loop(call) is not None:
+                yield self.finding(
+                    ctx, call,
+                    "jax.jit inside a loop builds a fresh executable "
+                    "(and re-traces) every iteration; hoist it and cache "
+                    "the jitted callable")
+                continue
+            info = ctx.function_info(fn) if fn is not None else None
+            if info is not None and info.is_hot:
+                yield self.finding(
+                    ctx, call,
+                    "jax.jit inside a @hot_path function compiles per "
+                    "call; build the executable once at setup and call "
+                    "it here")
+
+    # ------------------------------------------------------- traced branches
+    def _traced_functions(self, ctx: ModuleContext
+                          ) -> Iterable[tuple[ast.AST, tuple[str, ...]]]:
+        defs = {info.node.name: info.node for info in ctx.functions}
+        seen: set[ast.AST] = set()
+        for info in ctx.functions:
+            dec = _jit_decorator(info.node, ctx)
+            if dec is not None and info.node not in seen:
+                seen.add(info.node)
+                call = dec if isinstance(dec, ast.Call) else \
+                    ast.Call(func=ast.Name(id="jit"), args=[], keywords=[])
+                _, static = _jit_static_params(call, info.node)
+                yield info.node, static
+        # jax.jit(fn, ...) over a module-local def
+        for call in ctx.calls(*_JIT):
+            if call.args and isinstance(call.args[0], ast.Name):
+                fn = defs.get(call.args[0].id)
+                if fn is not None and fn not in seen:
+                    seen.add(fn)
+                    _, static = _jit_static_params(call, fn)
+                    yield fn, static
+
+    def _traced_branches(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for fn, static in self._traced_functions(ctx):
+            params = set(astutil.param_names(fn)) - set(static)
+            for node in astutil.walk_no_nested_functions(fn):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                name = self._traced_name_in_test(node.test, params)
+                if name is not None:
+                    yield self.finding(
+                        ctx, node,
+                        f"Python branch on traced argument `{name}` "
+                        "inside a jit-compiled function fails at trace "
+                        "time or forces per-value recompilation; use "
+                        "jax.lax.cond / jnp.where, or mark the argument "
+                        "static", severity=WARNING)
+
+    @staticmethod
+    def _traced_name_in_test(test: ast.AST, params: set[str]
+                             ) -> str | None:
+        if isinstance(test, ast.Compare) and \
+                any(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in test.ops):
+            return None                         # `x is None` is static
+        for node in ast.walk(test):
+            if isinstance(node, ast.Call):
+                dot_ok = isinstance(node.func, ast.Name) and \
+                    node.func.id in ("isinstance", "len", "callable")
+                if dot_ok:
+                    return None                 # static-shaped predicate
+            if isinstance(node, ast.Name) and node.id in params:
+                par = astutil.parent(node)
+                if isinstance(par, ast.Attribute) \
+                        and par.attr in _STATIC_ATTRS:
+                    continue                    # x.shape / x.ndim: static
+                return node.id
+        return None
+
+    # --------------------------------------------------- unhashable statics
+    def _unhashable_statics(self, ctx: ModuleContext) -> Iterable[Finding]:
+        jitted: dict[str, tuple[tuple[int, ...], tuple[str, ...]]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and ctx.resolve(node.value.func) in _JIT:
+                nums, names = _jit_static_params(node.value, None)
+                if not (nums or names):
+                    continue
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        jitted[t.id] = (nums, names)
+        if not jitted:
+            return
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in jitted):
+                continue
+            nums, names = jitted[node.func.id]
+            bad: list[ast.AST] = []
+            bad += [a for i, a in enumerate(node.args) if i in nums
+                    and isinstance(a, (ast.List, ast.Dict, ast.Set))]
+            bad += [kw.value for kw in node.keywords if kw.arg in names
+                    and isinstance(kw.value, (ast.List, ast.Dict,
+                                              ast.Set))]
+            for arg in bad:
+                yield self.finding(
+                    ctx, arg,
+                    f"unhashable literal passed at a static position of "
+                    f"`{node.func.id}`; static args must be hashable "
+                    "(use a tuple / frozenset)")

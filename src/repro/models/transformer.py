@@ -289,10 +289,11 @@ class DecoderLM:
         n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
         bounds = sorted({0, n, *[c for c in cuts if 0 < c < n]})
         caches = []
-        for lo, hi in zip(bounds[:-1], bounds[1:]):
-            seg = jax.tree.map(lambda a: a[lo:hi], stacked)
+        for lo, hi in zip(bounds[:-1], bounds[1:], strict=True):
+            seg = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], stacked)
             seg_cache = (None if cache is None else
-                         jax.tree.map(lambda a: a[lo:hi], cache))
+                         jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi],
+                                      cache))
 
             def body(carry, xs):
                 lp, lc = xs
@@ -317,8 +318,8 @@ class DecoderLM:
             parts.append(embeds.astype(cfg.dtype))
         if tokens is not None:
             parts.append(params["embed"]["table"][tokens])
-        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
-        return x
+        return jnp.concatenate(parts, axis=1) if len(parts) > 1 \
+            else parts[0]
 
     def _head(self, params, x):
         x = self._norm(params["head"]["norm"], x)
@@ -392,7 +393,7 @@ class DecoderLM:
     def init_cache(self, batch: int, max_seq: int) -> PyTree:
         cfg = self.cfg
         cache: dict = {}
-        for group, kind, n in cfg.runs():
+        for group, _kind, n in cfg.runs():
             if cfg.mla is not None:
                 one = mla_mod.mla_init_cache(cfg.mla, batch, max_seq,
                                              cfg.dtype)
@@ -404,7 +405,8 @@ class DecoderLM:
                                    cfg.dtype),
                 }
             cache[group] = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+                lambda a, n=n: jnp.broadcast_to(a[None], (n,) + a.shape),
+                one)
         return cache
 
     def prefill(self, params, tokens, cache, *,
@@ -417,7 +419,7 @@ class DecoderLM:
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         write_pos = jnp.zeros((b,), jnp.int32)
         new_cache = {}
-        for group, kind, n in cfg.runs():
+        for group, kind, _n in cfg.runs():
             x, new_cache[group] = self._run_stack(
                 kind, params[group], x, positions,
                 cache=cache[group], write_pos=write_pos)
@@ -432,7 +434,7 @@ class DecoderLM:
         b = x.shape[0]
         positions = pos[:, None]
         new_cache = {}
-        for group, kind, n in cfg.runs():
+        for group, kind, _n in cfg.runs():
             x, new_cache[group] = self._run_stack(
                 kind, params[group], x, positions,
                 cache=cache[group], write_pos=pos)
@@ -446,7 +448,7 @@ class DecoderLM:
         :class:`repro.serve.cache.PagedCachePool`)."""
         cfg = self.cfg
         cache: dict = {}
-        for group, kind, n in cfg.runs():
+        for group, _kind, n in cfg.runs():
             if cfg.mla is not None:
                 one = mla_mod.mla_init_paged_cache(cfg.mla, n_pages,
                                                    page_size, cfg.dtype)
@@ -458,7 +460,8 @@ class DecoderLM:
                                     cfg.hd), cfg.dtype),
                 }
             cache[group] = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+                lambda a, n=n: jnp.broadcast_to(a[None], (n,) + a.shape),
+                one)
         return cache
 
     def _attend_paged(self, p, x, positions, pages, block_tables, pos,
@@ -508,7 +511,7 @@ class DecoderLM:
         x = self._embed(params, token, None)
         positions = pos[:, None]
         new_pages = {}
-        for group, kind, n in cfg.runs():
+        for group, kind, _n in cfg.runs():
             def body(carry, xs, kd=kind):
                 lp, lpg = xs
                 return self._block_apply_paged(kd, lp, carry, positions,
@@ -524,7 +527,7 @@ class DecoderLM:
         cfg = self.cfg
         entries = [UnitEntry("embed", "embed", None)]
         gi = 0
-        for group, kind, n in cfg.runs():
+        for group, _kind, n in cfg.runs():
             for i in range(n):
                 entries.append(UnitEntry(f"layer_{gi + i}", group, i))
             gi += n
@@ -557,7 +560,7 @@ class DecoderLM:
     def param_count(self) -> int:
         cfg = self.cfg
         n = cfg.vocab * cfg.d_model                       # embed
-        for group, kind, cnt in cfg.runs():
+        for _group, kind, cnt in cfg.runs():
             n += cnt * self._block_param_count(kind)
         if cfg.mtp:
             n += self._block_param_count(cfg.runs()[-1][1]) \
@@ -575,7 +578,7 @@ class DecoderLM:
         n = cfg.vocab * cfg.d_model + cfg.d_model
         if not cfg.tie_embeddings:
             n += cfg.d_model * cfg.vocab
-        for group, kind, cnt in cfg.runs():
+        for _group, kind, cnt in cfg.runs():
             per = self._block_param_count(kind)
             if kind == "moe":
                 per = (per - moe_mod.moe_param_count(cfg.moe, cfg.d_model)
@@ -618,7 +621,7 @@ class DecoderLM:
         out = [("embed", float(cfg.vocab * cfg.d_model), 2.0 * tokens
                 * cfg.d_model)]
         gi = 0
-        for group, kind, cnt in cfg.runs():
+        for _group, kind, cnt in cfg.runs():
             per_p = float(self._block_param_count(kind))
             per_f = self._block_fwd_flops(kind, tokens, s, kv_len)
             for i in range(cnt):

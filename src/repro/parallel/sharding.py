@@ -140,7 +140,7 @@ def leaf_spec(logical: tuple, *, worker_axes: tuple[str, ...] = (),
         dims.append(m)
     if fsdp and fsdp_axis not in used:
         # shard the first unsharded, non-layer dim over `data`
-        for i, (ax, d) in enumerate(zip(logical, dims)):
+        for i, (ax, d) in enumerate(zip(logical, dims, strict=True)):
             if d is None and ax != "layers" and len(logical) >= 2 \
                     and divisible(i, fsdp_axis):
                 dims[i] = fsdp_axis

@@ -21,6 +21,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..lint import hot_path
+
 __all__ = ["PeriodPrefetcher", "stack_period_batches"]
 
 PyTree = Any
@@ -49,6 +51,7 @@ class PeriodPrefetcher:
         self.stacked = stacked
         self._staged: tuple[int, PyTree] | None = None
 
+    @hot_path
     def _build(self, start: int) -> PyTree:
         if self.stacked:
             return jax.device_put(stack_period_batches(self.data, start,
@@ -56,6 +59,7 @@ class PeriodPrefetcher:
         return [jax.device_put(self.data.batch(r))
                 for r in range(start, start + self.h)]
 
+    @hot_path
     def get(self, start: int) -> PyTree:
         """The period batch for iterations ``[start, start + H)`` —
         already staged if :meth:`prefetch` predicted this start (the
@@ -68,6 +72,7 @@ class PeriodPrefetcher:
         self._staged = None
         return self._build(start)
 
+    @hot_path
     def prefetch(self, start: int) -> None:
         """Asynchronously stage the period starting at ``start`` (call
         right after dispatching the current period, before blocking)."""

@@ -32,10 +32,10 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager, reshard_workers
 from ..core.plans import SyncPlan, local_plan
+from ..lint import hot_path
 from .pipeline import PeriodPrefetcher
 from .step import (StepConfig, TrainState, compose_makeup_step,
                    make_period_step, make_train_step)
@@ -180,21 +180,26 @@ class Runner:
         except Exception:                             # noqa: BLE001
             return False
 
+    @hot_path
     def _drain_metrics(self) -> None:
         """Convert device-resident period metrics into history rows.
 
         Fused periods stash ``(first_step, period_dt, metrics[H])``
         device-side; this is the only host transfer on the fused path
         and runs every ``log_every`` periods (plus at run end / before
-        a checkpoint restore)."""
-        for r0, dt, metrics in self._undrained:
+        a checkpoint restore).  ONE batched ``jax.device_get`` covers
+        every undrained period — not one sync per key per period — so
+        a drain costs a single host round-trip regardless of cadence."""
+        if not self._undrained:
+            return
+        drained = jax.device_get([m for _, _, m in self._undrained])
+        for (r0, dt, _), metrics in zip(self._undrained, drained, strict=True):
             if isinstance(metrics, list):      # pipeline: H per-phase dicts
                 host = [{k: float(v) for k, v in m.items()}
                         for m in metrics]
             else:                              # compiled: dict of [H] arrays
-                arrs = {k: np.asarray(v) for k, v in metrics.items()}
-                h_count = len(next(iter(arrs.values())))
-                host = [{k: float(v[h]) for k, v in arrs.items()}
+                h_count = len(next(iter(metrics.values())))
+                host = [{k: float(v[h]) for k, v in metrics.items()}
                         for h in range(h_count)]
             for h, row in enumerate(host):
                 self.history.append({
@@ -232,6 +237,7 @@ class Runner:
                                inject_straggler_at=inject_straggler_at)
 
     # -------------------------------------------------------- per-step path
+    @hot_path
     def _run_per_step(self, state: TrainState, n_steps: int, *,
                       start_step: int = 0,
                       inject_failure_at: int | None = None,
@@ -284,10 +290,13 @@ class Runner:
                 self.skipped_syncs += 1
             self._times.append(dt)
 
+            # the block above already synced; one device_get batches the
+            # (cheap, already-computed) metric transfers per step
+            row = jax.device_get(metrics)
             self.history.append({"step": r, "phase": phase,
                                  "time": dt,
                                  **{k: float(v) for k, v in
-                                    metrics.items()}})
+                                    row.items()}})
             if self.ckpt is not None and (r + 1) % \
                     self.run_cfg.ckpt_every == 0:
                 self.ckpt.save(r + 1, state,
@@ -298,6 +307,7 @@ class Runner:
         return state
 
     # ----------------------------------------------------------- fused path
+    @hot_path
     def _run_fused(self, state: TrainState, n_steps: int, *,
                    start_step: int = 0,
                    inject_failure_at: int | None = None,

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..lint import hot_path
 from ..runtime.step import (make_slot_decode_step,
                             make_slot_decode_step_paged,
                             make_slot_prefill_step, make_slot_refeed_step)
@@ -277,6 +278,7 @@ class ServeEngine:
         return out
 
     # ------------------------------------------------------------ admission
+    @hot_path
     def _admit(self, slot: int, rs: RequestState,
                finished: list[Completion]) -> None:
         req = rs.request
@@ -322,7 +324,9 @@ class ServeEngine:
         tok0_dev, carry_key = self._first_sample(
             logits, jnp.float32(sp.temperature), jnp.int32(sp.top_k),
             jnp.int32(sp.seed))
-        tok0 = int(tok0_dev)                       # device sync: TTFT point
+        # repro-lint: disable=HOST-SYNC -- intentional: the first token
+        # must reach the host here; this sync IS the TTFT measurement.
+        tok0 = int(tok0_dev)
         now = time.perf_counter()
         rs.first_token_t = now
         self._stats.prefill_time_s += now - t0
@@ -358,6 +362,7 @@ class ServeEngine:
         return comp
 
     # ----------------------------------------------------------- stepping
+    @hot_path
     def step(self) -> list[Completion]:
         """One scheduling tick: admit into free slots, then run one fused
         decode block.  Returns requests that finished this tick."""
@@ -381,14 +386,17 @@ class ServeEngine:
             t0 = time.perf_counter()
             arena, state, out, iters = self._decode_block(
                 self.params, self.pool.arena, self._state, *extra)
-            out_host = np.asarray(out)             # device sync
+            # ONE batched device sync per decode tick: emitted tokens,
+            # per-slot liveness, and the early-exit tick count land in a
+            # single transfer (three implicit per-array reads before)
+            out_host, active_host, n_iters = jax.device_get(
+                (out, state.active, iters))
             self._stats.decode_time_s += time.perf_counter() - t0
             self.pool.arena = arena
             self._state = state
-            active_host = np.asarray(state.active)
             st = self._stats
             st.decode_ticks += 1
-            st.slot_ticks_total += int(iters) * self.config.slots
+            st.slot_ticks_total += int(n_iters) * self.config.slots
             for slot in list(self.scheduler.running):
                 col = out_host[:, slot]
                 toks = col[col >= 0]

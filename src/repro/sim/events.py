@@ -148,6 +148,12 @@ class VirtualCluster:
         return fired
 
     def _apply(self, ev: ScenarioEvent, fire_it: int, clock: float) -> None:
+        if isinstance(ev, _WindowEnd):
+            if ev.kind == "straggler":
+                self._slow.pop(ev.target, None)
+            else:
+                self.network.end_degradation(ev.target, clock)
+            return                                     # not logged
         if isinstance(ev, StragglerOnset):
             self._slow[ev.worker] = ev.slowdown
             if ev.duration_periods is not None:
@@ -175,12 +181,6 @@ class VirtualCluster:
         elif isinstance(ev, TransientFailure):
             if ev.worker in self.active:
                 self._stall += ev.downtime
-        elif isinstance(ev, _WindowEnd):
-            if ev.kind == "straggler":
-                self._slow.pop(ev.target, None)
-            else:
-                self.network.end_degradation(ev.target, clock)
-            return                                     # not logged
         else:
             raise TypeError(f"unknown scenario event {ev!r}")
         self.log.append({"iteration": fire_it, "clock": clock,

@@ -79,5 +79,5 @@ def test_fill_sync_counts_cover_every_position(seed, mode):
     assert sum(counts) == 12 + sum(len(f) for f in fills.fills)
     assert fills.extra_syncs == sum(len(f) for f in fills.fills)
     # fills are disjoint from the phase's own interval
-    for (s, e), extra in zip(res.partition.bp_intervals(), fills.fills):
+    for (s, e), extra in zip(res.partition.bp_intervals(), fills.fills, strict=True):
         assert not (set(range(s, e)) & set(extra))

@@ -25,7 +25,7 @@ def test_roundtrip(tmp_path):
     step, got, meta = ck.restore(s)
     assert step == 10 and meta == {"x": 1}
     for a, b in zip(jax.tree_util.tree_leaves(s),
-                    jax.tree_util.tree_leaves(got)):
+                    jax.tree_util.tree_leaves(got), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

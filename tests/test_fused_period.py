@@ -47,7 +47,7 @@ def _assert_tree_equal(a, b, what=""):
     fa = jax.tree_util.tree_flatten_with_path(a)[0]
     fb = jax.tree_util.tree_flatten_with_path(b)[0]
     assert len(fa) == len(fb)
-    for (pa, la), (_, lb) in zip(fa, fb):
+    for (pa, la), (_, lb) in zip(fa, fb, strict=True):
         np.testing.assert_array_equal(
             np.asarray(la), np.asarray(lb),
             err_msg=f"{what}{jax.tree_util.keystr(pa)}")
@@ -110,7 +110,7 @@ def test_compiled_period_matches_oracle_to_ulps(setup, H):
         _assert_tree_equal(sp, sc, "state")
     else:
         for a, b in zip(jax.tree_util.tree_leaves(sp),
-                        jax.tree_util.tree_leaves(sc)):
+                        jax.tree_util.tree_leaves(sc), strict=True):
             np.testing.assert_allclose(np.asarray(a, np.float64),
                                        np.asarray(b, np.float64),
                                        rtol=1e-5, atol=1e-6)

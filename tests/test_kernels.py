@@ -195,7 +195,7 @@ def test_fused_adamw_sweep(shape, pdtype, step):
                                   jnp.float32)) * 0.01
     got = fused_adamw_step(p, g, m, v, 1e-3, step, weight_decay=0.1)
     want = adamw_ref(p, g, m, v, lr=1e-3, step=step, weight_decay=0.1)
-    for a, b in zip(got, want):
+    for a, b in zip(got, want, strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=2e-3, atol=2e-3)

@@ -1,0 +1,613 @@
+"""repro.lint: each rule fires on a seeded violation and stays silent on
+the nearest legitimate idiom; pragmas, baseline round-trip, JSON schema,
+CLI exit codes; and the tree itself lints clean."""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.lint import ERROR, WARNING, all_rules, hot_path, lint_paths
+from repro.lint import baseline as baseline_io
+from repro.lint.__main__ import main as lint_main
+from repro.lint.engine import lint_text
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------- HOST-SYNC
+
+HOT_PREAMBLE = """
+import jax
+import numpy as np
+from repro.lint import hot_path
+"""
+
+
+def test_host_sync_flags_float_of_loss_in_period_loop():
+    # the acceptance scenario: float(loss) injected into the period loop
+    src = HOT_PREAMBLE + """
+class Runner:
+    @hot_path
+    def run_period(self, steps):
+        state = self.state
+        for r in range(steps):
+            state, metrics = self.step_fn(state, self.data.batch(r))
+            self.history.append(float(metrics["loss"]))
+        return state
+"""
+    findings = lint_text(src, "runner.py")
+    assert rules_of(findings) == ["HOST-SYNC"]
+    assert findings[0].severity == ERROR
+    assert "float" in findings[0].message
+
+
+def test_host_sync_flags_np_asarray_and_item():
+    src = HOT_PREAMBLE + """
+@hot_path
+def drain(metrics):
+    a = np.asarray(metrics["loss"])
+    b = metrics["grad_norm"].item()
+    return a, b
+"""
+    assert sorted(rules_of(lint_text(src, "m.py"))) == \
+        ["HOST-SYNC", "HOST-SYNC"]
+
+
+def test_host_sync_silent_on_explicit_batched_device_get():
+    # near miss: same drain, but through the blessed explicit sync
+    src = HOT_PREAMBLE + """
+class Runner:
+    @hot_path
+    def run_period(self, steps):
+        state = self.state
+        for r in range(steps):
+            state, metrics = self.step_fn(state, self.data.batch(r))
+        host = jax.device_get(metrics)
+        self.history.append({k: float(v) for k, v in host.items()})
+        return state
+"""
+    assert lint_text(src, "runner.py") == []
+
+
+def test_host_sync_ignores_cold_functions():
+    src = HOT_PREAMBLE + """
+def summarize(metrics):
+    return float(np.asarray(metrics["loss"]))
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_host_sync_print_of_device_value_warns():
+    src = HOT_PREAMBLE + """
+@hot_path
+def tick(state):
+    out = jax.numpy.sum(state)
+    print(out)
+    print("static label")
+    return out
+"""
+    findings = lint_text(src, "m.py")
+    assert rules_of(findings) == ["HOST-SYNC"]
+    assert findings[0].severity == WARNING
+
+
+# ---------------------------------------------------------------- RECOMPILE
+
+def test_recompile_flags_jit_in_decode_tick():
+    # the acceptance scenario: jax.jit inside the per-request/tick body
+    src = """
+import jax
+
+class Engine:
+    def step(self, reqs):
+        for req in reqs:
+            fn = jax.jit(self.decode_fn)
+            out = fn(self.state, req)
+        return out
+"""
+    findings = lint_text(src, "engine.py")
+    assert rules_of(findings) == ["RECOMPILE"]
+    assert findings[0].severity == ERROR
+
+
+def test_recompile_silent_on_jit_at_init():
+    src = """
+import jax
+
+class Engine:
+    def __init__(self, decode_fn):
+        self.decode = jax.jit(decode_fn, donate_argnums=(0,))
+
+    def step(self, reqs):
+        for req in reqs:
+            out = self.decode(self.state, req)
+        return out
+"""
+    assert lint_text(src, "engine.py") == []
+
+
+def test_recompile_warns_on_traced_branch():
+    src = """
+import jax
+
+@jax.jit
+def f(x, lo):
+    if x > lo:
+        return x
+    return -x
+"""
+    findings = lint_text(src, "m.py")
+    assert rules_of(findings) == ["RECOMPILE"]
+    assert findings[0].severity == WARNING
+
+
+def test_recompile_silent_on_static_branches():
+    # shape reads, `is None`, and static_argnames params are not traced
+    src = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def f(x, mask, mode):
+    if mode == "train":
+        x = x * 2
+    if mask is not None:
+        x = x + mask
+    if x.ndim == 2:
+        x = x[None]
+    return x
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_recompile_flags_unhashable_static_arg():
+    src = """
+import jax
+
+def build(f):
+    g = jax.jit(f, static_argnums=(1,))
+    return g(x, [1, 2, 3])
+"""
+    assert rules_of(lint_text(src, "m.py")) == ["RECOMPILE"]
+
+
+# ------------------------------------------------------------------- DONATE
+
+def test_donate_flags_use_after_donate():
+    # the acceptance scenario: donated buffer read after the call
+    src = """
+import jax
+
+def train(step, state, batches):
+    g = jax.jit(step, donate_argnums=(0,))
+    new_state, metrics = g(state, batches[0])
+    return state.params, metrics
+"""
+    findings = lint_text(src, "m.py")
+    assert rules_of(findings) == ["DONATE"]
+    assert "state" in findings[0].message
+
+
+def test_donate_silent_on_rebind_idiom():
+    src = """
+import jax
+
+def train(step, state, batches):
+    g = jax.jit(step, donate_argnums=(0,))
+    for b in batches:
+        state, metrics = g(state, b)
+    return state, metrics
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_donate_flags_re_donation_in_loop():
+    # donated once, then donated again without rebinding
+    src = """
+import jax
+
+def train(step, state, batches):
+    g = jax.jit(step, donate_argnums=(0,))
+    outs = []
+    for b in batches:
+        outs.append(g(state, b))
+    return outs
+"""
+    assert "DONATE" in rules_of(lint_text(src, "m.py"))
+
+
+# ---------------------------------------------------------------- KEY-REUSE
+
+def test_key_reuse_flags_reused_key():
+    # the acceptance scenario: the same PRNG key consumed twice
+    src = """
+import jax
+
+def init(seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (4, 4))
+    b = jax.random.normal(key, (4,))
+    return w, b
+"""
+    findings = lint_text(src, "m.py")
+    assert rules_of(findings) == ["KEY-REUSE"]
+    assert "key" in findings[0].message
+
+
+def test_key_reuse_silent_on_split():
+    src = """
+import jax
+
+def init(seed):
+    key = jax.random.PRNGKey(seed)
+    kw, kb = jax.random.split(key)
+    w = jax.random.normal(kw, (4, 4))
+    b = jax.random.normal(kb, (4,))
+    return w, b
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_key_reuse_flags_key_param_in_loop():
+    src = """
+import jax
+
+def rollout(key, n):
+    outs = []
+    for i in range(n):
+        outs.append(jax.random.normal(key, (4,)))
+    return outs
+"""
+    assert rules_of(lint_text(src, "m.py")) == ["KEY-REUSE"]
+
+
+def test_key_reuse_silent_on_per_iteration_split():
+    src = """
+import jax
+
+def rollout(key, n):
+    outs = []
+    for i in range(n):
+        key, sub = jax.random.split(key)
+        outs.append(jax.random.normal(sub, (4,)))
+    return outs
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_key_reuse_tracks_split_subscripts():
+    src = """
+import jax
+
+def f(seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.normal(keys[0], (2,))
+    b = jax.random.normal(keys[0], (2,))
+    return a, b
+"""
+    assert rules_of(lint_text(src, "m.py")) == ["KEY-REUSE"]
+
+
+# ------------------------------------------------------------------- PALLAS
+
+PALLAS_PREAMBLE = """
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+"""
+
+
+def test_pallas_flags_index_map_arity():
+    src = PALLAS_PREAMBLE + """
+def kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def run(x):
+    return pl.pallas_call(
+        kern,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 256), jnp.float32),
+    )(x)
+"""
+    findings = lint_text(src, "src/repro/kernels/k/kernel.py")
+    assert rules_of(findings) == ["PALLAS"]
+    assert "rank 2" in findings[0].message
+
+
+def test_pallas_counts_scalar_prefetch_in_arity():
+    # index maps under PrefetchScalarGridSpec(num_scalar_prefetch=k)
+    # take k extra leading scalar-ref arguments
+    src = PALLAS_PREAMBLE + """
+def kern(s_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def run(x, s):
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((128,), lambda s0, i: (i,))],
+            out_specs=pl.BlockSpec((128,), lambda s0, i: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((512,), jnp.float32),
+    )(s, x)
+"""
+    assert lint_text(src, "src/repro/kernels/k/kernel.py") == []
+
+
+def test_pallas_flags_python_branch_on_program_id():
+    src = PALLAS_PREAMBLE + """
+def kern(x_ref, o_ref):
+    i = pl.program_id(0)
+    if i == 0:
+        o_ref[...] = x_ref[...]
+"""
+    findings = lint_text(src, "src/repro/kernels/k/kernel.py")
+    assert rules_of(findings) == ["PALLAS"]
+    assert "pl.when" in findings[0].message
+
+
+def test_pallas_silent_on_pl_when():
+    src = PALLAS_PREAMBLE + """
+def kern(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _first():
+        o_ref[...] = x_ref[...]
+"""
+    assert lint_text(src, "src/repro/kernels/k/kernel.py") == []
+
+
+def test_pallas_warns_on_dtype_mismatch():
+    src = PALLAS_PREAMBLE + """
+def kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float16)
+
+def run(x):
+    return pl.pallas_call(
+        kern,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((128,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((512,), jnp.float32),
+    )(x)
+"""
+    findings = lint_text(src, "src/repro/kernels/k/kernel.py")
+    assert rules_of(findings) == ["PALLAS"]
+    assert findings[0].severity == WARNING
+
+
+# ---------------------------------------------------------- SIM-DETERMINISM
+
+def test_sim_determinism_flags_wallclock_and_set_iteration():
+    src = """
+import time
+
+class Sim:
+    def run(self, pending: set):
+        t0 = time.time()
+        out = []
+        for ev in pending:
+            out.append(ev)
+        return out, t0
+"""
+    findings = lint_text(src, "src/repro/sim/executor.py")
+    assert sorted(rules_of(findings)) == \
+        ["SIM-DETERMINISM", "SIM-DETERMINISM"]
+
+
+def test_sim_determinism_silent_on_sorted_and_seeded_rng():
+    src = """
+import random
+
+class Sim:
+    def run(self, pending: set, seed: int):
+        rng = random.Random(seed)
+        out = [rng.random() for _ in sorted(pending)]
+        return out, len(pending)
+"""
+    assert lint_text(src, "src/repro/sim/executor.py") == []
+
+
+def test_sim_determinism_scoped_to_sim_modules():
+    # the same hazards outside sim/ and core/schedule.py don't apply
+    src = """
+import time
+
+def f(pending: set):
+    t = time.time()
+    return [e for e in pending], t
+"""
+    assert lint_text(src, "src/repro/serve/engine.py") == []
+
+
+# ------------------------------------------------------- pragmas / baseline
+
+def test_pragma_suppresses_named_rule():
+    src = HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    v = x.item()  # repro-lint: disable=HOST-SYNC -- measured on purpose
+    return v
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_pragma_standalone_comment_covers_next_statement():
+    src = HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    # repro-lint: disable=HOST-SYNC -- this sync IS the
+    # measurement boundary (two-line justification)
+    v = x.item()
+    return v
+"""
+    assert lint_text(src, "m.py") == []
+
+
+def test_pragma_other_rule_does_not_suppress():
+    src = HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    v = x.item()  # repro-lint: disable=RECOMPILE
+    return v
+"""
+    assert rules_of(lint_text(src, "m.py")) == ["HOST-SYNC"]
+
+
+def test_baseline_round_trip(tmp_path):
+    src = HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    return x.item()
+"""
+    findings = lint_text(src, "m.py")
+    assert len(findings) == 1
+    path = tmp_path / "baseline.json"
+    baseline_io.save(path, findings)
+    grandfathered = baseline_io.load(path)
+    new, old = baseline_io.partition(findings, grandfathered)
+    assert new == [] and len(old) == 1
+    # a second, identical-looking occurrence is NOT absorbed: the
+    # baseline matches by count
+    new2, old2 = baseline_io.partition(findings * 2, grandfathered)
+    assert len(new2) == 1 and len(old2) == 1
+
+
+def test_baseline_missing_file_gates_everything(tmp_path):
+    assert baseline_io.load(tmp_path / "absent.json") == {}
+
+
+def test_baseline_version_mismatch_raises(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        baseline_io.load(p)
+
+
+def test_fingerprint_stable_under_line_churn():
+    src_a = HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    return x.item()
+"""
+    src_b = HOT_PREAMBLE + "\n\n\n" + """
+@hot_path
+def tick(x):
+    return   x.item()
+"""
+    fa = lint_text(src_a, "m.py")[0]
+    fb = lint_text(src_b, "m.py")[0]
+    assert fa.line != fb.line
+    assert fa.fingerprint() == fb.fingerprint()
+
+
+# ------------------------------------------------------------ CLI / output
+
+def test_cli_exit_codes_and_json_schema(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    return x.item()
+""")
+    rc = lint_main([str(bad), "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["version"] == 1
+    assert payload["summary"]["errors"] == 1
+    (f,) = payload["findings"]
+    assert set(f) >= {"rule", "severity", "path", "line", "col",
+                      "message", "context", "fingerprint"}
+    assert f["rule"] == "HOST-SYNC" and f["context"] == "tick"
+
+    # baselining the finding turns the run green
+    rc = lint_main([str(bad), "--baseline", str(tmp_path / "b.json"),
+                    "--write-baseline"])
+    assert rc == 0
+    capsys.readouterr()
+    rc = lint_main([str(bad), "--baseline", str(tmp_path / "b.json")])
+    assert rc == 0
+    assert "baselined" in capsys.readouterr().out
+
+
+def test_cli_warning_only_exits_zero_unless_strict(tmp_path, capsys):
+    warn = tmp_path / "warn.py"
+    warn.write_text(HOT_PREAMBLE + """
+@hot_path
+def tick(state):
+    out = jax.numpy.sum(state)
+    print(out)
+    return out
+""")
+    assert lint_main([str(warn)]) == 0
+    capsys.readouterr()
+    assert lint_main([str(warn), "--strict"]) == 1
+    capsys.readouterr()
+
+
+def test_cli_select_and_ignore(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(HOT_PREAMBLE + """
+@hot_path
+def tick(x):
+    return x.item()
+""")
+    assert lint_main([str(bad), "--select", "RECOMPILE"]) == 0
+    capsys.readouterr()
+    assert lint_main([str(bad), "--ignore", "HOST-SYNC"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_syntax_error_reports_parse_finding(tmp_path, capsys):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    assert lint_main([str(bad)]) == 1
+    assert "PARSE" in capsys.readouterr().out
+
+
+def test_module_entrypoint_runs_clean_on_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "src/repro",
+         "--baseline", ".repro-lint-baseline.json"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------------- self checks
+
+def test_registry_has_all_rule_families():
+    names = {r.name for r in all_rules().values()}
+    assert names >= {"HOST-SYNC", "RECOMPILE", "DONATE", "KEY-REUSE",
+                     "PALLAS", "SIM-DETERMINISM"}
+
+
+def test_hot_path_decorator_is_passthrough():
+    @hot_path
+    def f(x):
+        return x + 1
+
+    assert f(1) == 2
+    assert f.__repro_hot_path__ is True
+    assert f.__name__ == "f"
+
+
+def test_repo_tree_lints_clean():
+    findings = lint_paths([REPO / "src" / "repro"])
+    assert [f.render() for f in findings
+            if f.severity == ERROR] == []

@@ -49,7 +49,7 @@ def _setup(arch_id):
 def _naive_rows(model, params, prompts, extras, budgets, frontend):
     loop = NaiveLoop(model, params, frontend=frontend)
     rows = []
-    for p, e, g in zip(prompts, extras, budgets):
+    for p, e, g in zip(prompts, extras, budgets, strict=True):
         batched = tuple(jnp.asarray(a)[None] for a in e)
         rows.append(np.asarray(loop.generate(
             jnp.asarray([p], jnp.int32), g, *batched))[0].tolist())
@@ -81,8 +81,8 @@ def test_paged_greedy_equivalence_with_midstream_admission(arch_id,
                       frontend=arch.frontend)
     comps = eng.generate([
         Request(tokens=p, max_new_tokens=g, extra=e)
-        for p, g, e in zip(prompts, _BUDGETS, extras)])
-    for comp, ref, g in zip(comps, refs, _BUDGETS):
+        for p, g, e in zip(prompts, _BUDGETS, extras, strict=True)])
+    for comp, ref, g in zip(comps, refs, _BUDGETS, strict=True):
         assert comp.tokens == ref
         assert len(comp.tokens) == g
     assert eng.stats.requests_completed == len(prompts)
@@ -91,7 +91,7 @@ def test_paged_greedy_equivalence_with_midstream_admission(arch_id,
 def test_paged_matches_contiguous_backend_token_for_token():
     _, model, params, prompts, _ = _setup("qwen3-1.7b")
     reqs = lambda: [Request(tokens=p, max_new_tokens=g)
-                    for p, g in zip(prompts, _BUDGETS)]
+                    for p, g in zip(prompts, _BUDGETS, strict=True)]
     cont = ServeEngine(model, params, _paged_cfg(kv_backend="contiguous"))
     paged = ServeEngine(model, params, _paged_cfg())
     a = cont.generate(reqs())
@@ -106,7 +106,7 @@ def test_paged_zero_recompiles_across_admit_extend_finish():
     _, model, params, prompts, _ = _setup("qwen3-1.7b")
     eng = ServeEngine(model, params, _paged_cfg())
     reqs = lambda: [Request(tokens=p, max_new_tokens=g)
-                    for p, g in zip(prompts, _BUDGETS)]
+                    for p, g in zip(prompts, _BUDGETS, strict=True)]
     first = eng.generate(reqs())
     misses = eng.compile_stats()
     assert "prefill_scatter" in misses
@@ -140,8 +140,8 @@ def test_page_exhaustion_defers_admission_not_corrupts():
     # of 8... need covers s + max_new; give 4 usable pages (+1 trash)
     eng = ServeEngine(model, params, _paged_cfg(kv_pages=5))
     comps = eng.generate([Request(tokens=p, max_new_tokens=g)
-                          for p, g in zip(prompts, _BUDGETS)])
-    for comp, ref in zip(comps, refs):
+                          for p, g in zip(prompts, _BUDGETS, strict=True)])
+    for comp, ref in zip(comps, refs, strict=True):
         assert comp.tokens == ref
     assert eng.pool.peak_pages_in_use <= 4
 
@@ -151,8 +151,8 @@ def test_paged_chunked_prefill_greedy_exact():
     refs = _naive_rows(model, params, prompts, extras, _BUDGETS, None)
     eng = ServeEngine(model, params, _paged_cfg(prefill_chunk=8))
     comps = eng.generate([Request(tokens=p, max_new_tokens=g)
-                          for p, g in zip(prompts, _BUDGETS)])
-    for comp, ref in zip(comps, refs):
+                          for p, g in zip(prompts, _BUDGETS, strict=True)])
+    for comp, ref in zip(comps, refs, strict=True):
         assert comp.tokens == ref
     # prompt lengths {5, 8, 11} collapse into buckets {8, 16}
     assert eng.compile_stats()["prefill"] == 2

@@ -53,9 +53,9 @@ def test_sync_preserves_mean():
     """Averaging preserves the worker mean of every synced leaf."""
     p = _params(jax.random.PRNGKey(1))
     out = sync_units(p, [0, 2, 4], _layout())
-    for (ka, a), (kb, b) in zip(
+    for (_ka, a), (_kb, b) in zip(
             jax.tree_util.tree_leaves_with_path(p),
-            jax.tree_util.tree_leaves_with_path(out)):
+            jax.tree_util.tree_leaves_with_path(out), strict=True):
         np.testing.assert_allclose(np.asarray(a.mean(0)),
                                    np.asarray(b.mean(0)), atol=1e-5)
 
@@ -97,7 +97,7 @@ def test_contiguous_ranges_property(seed):
     covered = sorted(i for lo, hi in rs for i in range(lo, hi))
     assert covered == sorted(set(xs))
     # ranges are disjoint, ordered, non-adjacent
-    for (l1, h1), (l2, h2) in zip(rs, rs[1:]):
+    for (_l1, h1), (l2, _h2) in zip(rs, rs[1:], strict=False):
         assert h1 < l2
 
 

@@ -51,7 +51,7 @@ def _setup(arch_id):
 def _naive_rows(model, params, prompts, extras, budgets, frontend):
     loop = NaiveLoop(model, params, frontend=frontend)
     rows = []
-    for p, e, g in zip(prompts, extras, budgets):
+    for p, e, g in zip(prompts, extras, budgets, strict=True):
         batched = tuple(jnp.asarray(a)[None] for a in e)
         rows.append(np.asarray(loop.generate(
             jnp.asarray([p], jnp.int32), g, *batched))[0].tolist())
@@ -75,8 +75,8 @@ def test_greedy_equivalence_with_midstream_admission(arch_id, family):
         frontend=arch.frontend)
     comps = eng.generate([
         Request(tokens=p, max_new_tokens=g, extra=e)
-        for p, g, e in zip(prompts, _BUDGETS, extras)])
-    for comp, ref, g in zip(comps, refs, _BUDGETS):
+        for p, g, e in zip(prompts, _BUDGETS, extras, strict=True)])
+    for comp, ref, g in zip(comps, refs, _BUDGETS, strict=True):
         assert comp.tokens == ref
         assert comp.finish_reason == "length"
         assert len(comp.tokens) == g
@@ -105,8 +105,8 @@ def test_chunked_prefill_greedy_exact():
                       EngineConfig(max_batch=2, max_seq=64,
                                    prefill_chunk=8))
     comps = eng.generate([Request(tokens=p, max_new_tokens=g)
-                          for p, g in zip(prompts, _BUDGETS)])
-    for comp, ref in zip(comps, refs):
+                          for p, g in zip(prompts, _BUDGETS, strict=True)])
+    for comp, ref in zip(comps, refs, strict=True):
         assert comp.tokens == ref
     # prompt lengths {5, 8, 11} collapse into buckets {8, 16}
     assert eng.compile_stats()["prefill"] == 2
@@ -248,7 +248,7 @@ def test_engine_stats_accounting():
     _, model, params, prompts, _ = _setup("qwen3-1.7b")
     eng = ServeEngine(model, params, EngineConfig(max_batch=2, max_seq=64))
     eng.generate([Request(tokens=p, max_new_tokens=g)
-                  for p, g in zip(prompts, _BUDGETS)])
+                  for p, g in zip(prompts, _BUDGETS, strict=True)])
     st = eng.stats
     assert st.requests_completed == len(prompts)
     assert st.generated_tokens == sum(_BUDGETS)
@@ -258,7 +258,7 @@ def test_engine_stats_accounting():
     assert st.decode_time_s > 0 and st.prefill_time_s > 0
     assert st.decode_tokens_per_s > 0
     assert len(st.ttft_s) == len(prompts)
-    assert all(l >= t > 0 for t, l in zip(st.ttft_s, st.latency_s))
+    assert all(l >= t > 0 for t, l in zip(st.ttft_s, st.latency_s, strict=True))
     assert 0 < st.slot_utilization <= 1
     d = st.as_dict()
     assert d["generated_tokens"] == sum(_BUDGETS)
