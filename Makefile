@@ -20,10 +20,12 @@ test-fast:
 bench:
 	$(PY_PATH) python -m benchmarks.run --fast
 
-# Continuous batching vs naive serving loop + paged-vs-contiguous KV
+# Continuous batching vs naive serving loop + paged-vs-contiguous KV,
+# then the Poisson traffic replay (TTFT/TPOT percentiles)
 # (writes benchmarks/results/ — the check-bench baselines)
 serve-bench:
 	$(PY_PATH) python -m benchmarks.bench_serve --smoke
+	$(PY_PATH) python -m benchmarks.bench_traffic --smoke
 
 # Period-fused training runner vs the per-step oracle (1.3x bar;
 # writes benchmarks/results/bench_train_loop.json)

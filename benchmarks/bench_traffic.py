@@ -1,0 +1,308 @@
+"""Traffic replay: the serve engine under Poisson arrivals vs the naive
+loop serving the same trace.
+
+``bench_serve`` measures throughput on a closed batch (every request
+present at t=0).  This bench measures what an online server sees: a
+seeded Poisson arrival process with mixed prompt/generation lengths,
+replayed against the wall clock — a request may only be submitted once
+its arrival time has passed, so queueing delay is real and TTFT/TPOT
+percentiles mean what they mean in serving papers.  This is the workload
+where per-request admission dispatch hurt most: bursts of short-gen
+arrivals spend their life in prefill, so admission cost lands directly
+on TTFT and on wall clock.
+
+Both sides replay the identical trace:
+
+* **engine** — requests are submitted as they arrive (``submit_t``
+  pinned to the arrival time) and the engine ticks continuously;
+  admissions batch per shape bucket within a tick (PR 7).
+* **naive** — the old loop as an online server: FIFO head-of-line, and
+  each dispatch greedily batches up to ``max_batch`` *arrived* requests
+  with the head's (prompt length, budget) — the strongest grouping the
+  fixed-batch loop can do online.  First tokens are synced at the
+  prefill boundary so its TTFT is honest, not end-of-batch.
+
+Token streams are asserted identical to per-request naive references
+(greedy, no EOS), so ``prompt_tokens`` / ``generated_tokens`` are exact
+and regression-gated by ``scripts/check_bench.py --only traffic``;
+wall-clock metrics (requests/sec, wall_speedup) are banded and latency
+percentiles are banded from above (lower is better).
+
+Every jit the replay can hit is compiled in an untimed sweep first
+(every (group size, prompt length) pair on the engine side, every
+(batch, length) on the naive side), so compile time never pollutes a
+timed replay and mid-replay group-size jitter cannot recompile.
+
+``python -m benchmarks.bench_traffic --smoke`` writes
+``benchmarks/results/bench_traffic.json`` and exits non-zero unless the
+engine clears ``TRAFFIC_WALL_BAR`` on the best row.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRAFFIC_WALL_BAR = 1.0    # engine wall clock must beat the naive server
+REPEATS = 3
+_OUT = os.path.join(os.path.dirname(__file__), "results",
+                    "bench_traffic.json")
+
+
+def make_traffic(vocab, *, n_requests, rate_rps, prompt_lens, gens, seed):
+    """Seeded Poisson arrival trace: ``[(t_arrival, prompt, gen), ...]``
+    sorted by arrival, prompt/gen lengths drawn per request."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for t in arrivals:
+        s = int(rng.choice(prompt_lens))
+        g = int(rng.choice(gens))
+        trace.append((float(t), rng.randint(0, vocab, size=s).tolist(), g))
+    return trace
+
+
+def _percentiles(vals):
+    return {"p50": float(np.percentile(vals, 50)),
+            "p99": float(np.percentile(vals, 99))}
+
+
+def _latency_metrics(ttfts, tpots, n, wall):
+    t, p = _percentiles(ttfts), _percentiles(tpots)
+    return {"wall_s": wall, "requests_per_s": n / wall,
+            "ttft_p50_s": t["p50"], "ttft_p99_s": t["p99"],
+            "tpot_p50_s": p["p50"], "tpot_p99_s": p["p99"]}
+
+
+# ------------------------------------------------------------------- engine
+
+def _warm_engine(engine, prompt_lens, gens, max_batch, vocab, seed):
+    """Compile every executable a replay can hit: each (K, S) admission
+    group for K = 1..max_batch, plus the decode block."""
+    from repro.serve import Request
+
+    rng = np.random.RandomState(seed)
+    for s in sorted(set(prompt_lens)):
+        for k in range(1, max_batch + 1):
+            engine.generate([
+                Request(tokens=rng.randint(0, vocab, size=s).tolist(),
+                        max_new_tokens=2)
+                for _ in range(k)])
+    engine.reset()
+
+
+def _replay_engine(engine, trace):
+    """Submit each request when its arrival time passes; tick until the
+    trace is drained.  Returns (completions by submit order, wall_s)."""
+    from repro.serve import Request
+
+    engine.reset(params=engine.params)
+    comps = {}
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(trace) or engine.has_work:
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            t_arr, prompt, gen = trace[i]
+            engine.submit(Request(tokens=prompt, max_new_tokens=gen,
+                                  request_id=i),
+                          submit_t=t0 + t_arr)
+            i += 1
+        if engine.has_work:
+            for c in engine.step():
+                comps[c.request_id] = c
+        elif i < len(trace):
+            time.sleep(min(max(trace[i][0] - now, 0.0), 5e-4))
+    wall = time.perf_counter() - t0
+    return [comps[j] for j in range(len(trace))], wall
+
+
+# -------------------------------------------------------------------- naive
+
+def _warm_naive(loop, prompt_lens, gens, max_batch, vocab, seed):
+    """The naive cache is sized ``s + gen``, so every (batch, prompt
+    length, budget) combination is its own set of executables — warm
+    them all or the timed replay pays compile time."""
+    rng = np.random.RandomState(seed)
+    for s in sorted(set(prompt_lens)):
+        for g in sorted(set(gens)):
+            for k in range(1, max_batch + 1):
+                loop.generate(jnp.asarray(rng.randint(
+                    0, vocab, size=(k, s)), jnp.int32), g)
+
+
+def _replay_naive(loop, trace, max_batch):
+    """The old loop as an online server: when free, dispatch the FIFO
+    head batched with up to ``max_batch - 1`` arrived requests of the
+    same (prompt length, budget); prefill syncs first tokens (TTFT),
+    the decode loop runs the batch to its full budget (no EOS exit)."""
+    queue = list(range(len(trace)))
+    ttft = [0.0] * len(trace)
+    done = [0.0] * len(trace)
+    t0 = time.perf_counter()
+    while queue:
+        now = time.perf_counter() - t0
+        head = queue[0]
+        if trace[head][0] > now:
+            time.sleep(min(trace[head][0] - now, 5e-4))
+            continue
+        key = (len(trace[head][1]), trace[head][2])
+        batch_ids = [head]
+        for j in queue[1:]:
+            if len(batch_ids) == max_batch:
+                break
+            if trace[j][0] <= now and \
+                    (len(trace[j][1]), trace[j][2]) == key:
+                batch_ids.append(j)
+        queue = [j for j in queue if j not in batch_ids]
+        s, gen = key
+        batch = jnp.asarray([trace[j][1] for j in batch_ids], jnp.int32)
+        b = len(batch_ids)
+        cache = loop.model.init_cache(b, s + gen)
+        logits, cache = loop.prefill(loop.params, batch, cache)
+        out = jax.block_until_ready(jnp.argmax(logits, -1)
+                                    .astype(jnp.int32))
+        t_first = time.perf_counter() - t0
+        for j in batch_ids:
+            ttft[j] = t_first - trace[j][0]
+        for i in range(gen - 1):
+            pos = jnp.full((b,), s + i, jnp.int32)
+            logits, cache = loop.decode(loop.params, cache, out, pos)
+            out = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(out)
+        t_done = time.perf_counter() - t0
+        for j in batch_ids:
+            done[j] = t_done - trace[j][0]
+    wall = time.perf_counter() - t0
+    return ttft, done, wall
+
+
+# --------------------------------------------------------------------- case
+
+def run_case(model, params, *, n_requests, rate_rps, prompt_lens, gens,
+             max_batch, decode_block=4, seed=7):
+    from repro.serve import EngineConfig, ServeEngine
+    from repro.serve.naive import NaiveLoop
+
+    vocab = model.cfg.vocab
+    trace = make_traffic(vocab, n_requests=n_requests, rate_rps=rate_rps,
+                         prompt_lens=prompt_lens, gens=gens, seed=seed)
+    loop = NaiveLoop(model, params)
+    refs = [np.asarray(loop.generate(jnp.asarray([p], jnp.int32),
+                                     g))[0].tolist()
+            for _, p, g in trace]
+
+    engine = ServeEngine(model, params, EngineConfig(
+        max_batch=max_batch, max_seq=max(prompt_lens) + max(gens),
+        decode_block=decode_block))
+    _warm_engine(engine, prompt_lens, gens, max_batch, vocab, seed)
+    best_eng = None
+    for _ in range(REPEATS):
+        comps, wall = _replay_engine(engine, trace)
+        for c, r in zip(comps, refs, strict=True):
+            assert c.tokens == r, "engine/naive divergence in bench"
+        if best_eng is None or wall < best_eng[1]:
+            best_eng = (comps, wall, engine.stats.as_dict())
+    comps, eng_wall, eng_stats = best_eng
+    eng_ttft = [c.ttft_s for c in comps]
+    eng_tpot = [(c.latency_s - c.ttft_s) / (len(c.tokens) - 1)
+                for c in comps if len(c.tokens) > 1]
+
+    _warm_naive(loop, prompt_lens, gens, max_batch, vocab, seed)
+    best_naive = None
+    for _ in range(REPEATS):
+        ttft, done, wall = _replay_naive(loop, trace, max_batch)
+        if best_naive is None or wall < best_naive[2]:
+            best_naive = (ttft, done, wall)
+    nv_ttft, nv_done, nv_wall = best_naive
+    nv_tpot = [(d - t) / (g - 1)
+               for t, d, (_, _, g) in zip(nv_ttft, nv_done, trace,
+                                          strict=True) if g > 1]
+
+    eng_m = _latency_metrics(eng_ttft, eng_tpot, n_requests, eng_wall)
+    eng_m["stats"] = eng_stats
+    nv_m = _latency_metrics(nv_ttft, nv_tpot, n_requests, nv_wall)
+    return {
+        "n_requests": n_requests, "rate_rps": rate_rps, "seed": seed,
+        "prompt_lens": list(prompt_lens), "gens": list(gens),
+        "max_batch": max_batch, "decode_block": decode_block,
+        "prompt_tokens": sum(len(p) for _, p, _ in trace),
+        "generated_tokens": sum(g for _, _, g in trace),
+        "engine": eng_m, "naive": nv_m,
+        # gated metrics at the row top level (engine side)
+        "requests_per_s": eng_m["requests_per_s"],
+        "ttft_p50_s": eng_m["ttft_p50_s"],
+        "ttft_p99_s": eng_m["ttft_p99_s"],
+        "tpot_p50_s": eng_m["tpot_p50_s"],
+        "tpot_p99_s": eng_m["tpot_p99_s"],
+        "wall_speedup": nv_wall / eng_wall,
+    }
+
+
+def run(*, arch="qwen3-1.7b", smoke=True, out_json=_OUT):
+    from repro.configs import get_arch
+
+    spec = get_arch(arch)
+    model = spec.make_smoke() if smoke else spec.make_model()
+    params = model.init(jax.random.PRNGKey(0))
+
+    # one admission-heavy burst (short budgets: prefill-dominated) and
+    # one steadier decode-heavy trace
+    cases = ([dict(n_requests=24, rate_rps=2000.0, prompt_lens=(8, 16),
+                   gens=(4, 8), max_batch=4),
+              dict(n_requests=12, rate_rps=400.0, prompt_lens=(8, 16),
+                   gens=(16,), max_batch=4)]
+             if smoke else
+             [dict(n_requests=64, rate_rps=200.0, prompt_lens=(16, 32),
+                   gens=(8, 16), max_batch=8),
+              dict(n_requests=32, rate_rps=50.0, prompt_lens=(16, 32),
+                   gens=(32,), max_batch=8)])
+
+    rows = []
+    for case in cases:
+        r = run_case(model, params, **case)
+        rows.append(r)
+        print(f"rate={r['rate_rps']:.0f}/s gens={r['gens']}: "
+              f"engine {r['requests_per_s']:.1f} req/s "
+              f"(wall {r['engine']['wall_s']:.3f}s, "
+              f"TTFT p50/p99 {r['ttft_p50_s'] * 1e3:.1f}/"
+              f"{r['ttft_p99_s'] * 1e3:.1f} ms, TPOT p50 "
+              f"{r['tpot_p50_s'] * 1e3:.2f} ms) vs naive "
+              f"{r['naive']['requests_per_s']:.1f} req/s — "
+              f"wall speedup {r['wall_speedup']:.2f}x")
+
+    report = {"arch": arch, "smoke": smoke,
+              "traffic_wall_bar": TRAFFIC_WALL_BAR, "rows": rows}
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {out_json}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=_OUT)
+    args = ap.parse_args(argv)
+    report = run(arch=args.arch, smoke=args.smoke, out_json=args.out)
+    best = max(r["wall_speedup"] for r in report["rows"])
+    if best < TRAFFIC_WALL_BAR:
+        print(f"FAIL: best traffic wall speedup {best:.2f}x < "
+              f"{TRAFFIC_WALL_BAR}x bar")
+        return 1
+    print(f"traffic replay >= {TRAFFIC_WALL_BAR}x wall bar: "
+          f"best {best:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,6 +11,7 @@ Sections:
   fig16    search complexity
   kernels  Pallas kernels vs oracles + v5e projections
   serve    continuous batching vs naive loop (bench_serve smoke sweep)
+  traffic  Poisson traffic replay: TTFT/TPOT percentiles vs naive server
   roofline dry-run roofline table (if artifacts exist)
 
 Asserts the paper's qualitative claims along the way and exits non-zero on
@@ -105,6 +106,13 @@ def main(argv=None) -> int:
             failures.append(("serve-paged",
                              {"kv_bytes_ratio": r["kv_bytes_ratio"],
                               "goodput_ratio": r["goodput_ratio"]}))
+
+    _section("Serving: Poisson traffic replay (TTFT/TPOT percentiles)")
+    from . import bench_traffic
+    traffic_report = bench_traffic.run(smoke=True)
+    best_wall = max(r["wall_speedup"] for r in traffic_report["rows"])
+    if best_wall < bench_traffic.TRAFFIC_WALL_BAR:
+        failures.append(("serve-traffic", {"best_wall_speedup": best_wall}))
 
     if not args.fast:
         from . import bench_convergence

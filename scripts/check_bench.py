@@ -1,11 +1,15 @@
 #!/usr/bin/env python
 """Benchmark regression gate: fresh smoke benches vs committed baselines.
 
-Gates three reports against the committed baseline JSONs in
+Gates four reports against the committed baseline JSONs in
 ``benchmarks/results/``:
 
 * ``serve`` — ``benchmarks.bench_serve --smoke`` (continuous batching +
   paged KV);
+* ``traffic`` — ``benchmarks.bench_traffic --smoke`` (Poisson-arrival
+  replay; deterministic token counts exact, requests/sec and
+  wall_speedup banded from below, TTFT/TPOT percentiles banded from
+  *above* — latency regressions fail, improvements always pass);
 * ``train`` — ``benchmarks.bench_train_loop --smoke`` (period-fused
   runner vs the per-step oracle; wall-clock speedups banded like serve,
   workload identity exact);
@@ -55,6 +59,7 @@ import tempfile
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _RESULTS = os.path.join(_ROOT, "benchmarks", "results")
 BASELINE = os.path.join(_RESULTS, "bench_serve.json")
+BASELINE_TRAFFIC = os.path.join(_RESULTS, "bench_traffic.json")
 BASELINE_TRAIN = os.path.join(_RESULTS, "bench_train_loop.json")
 BASELINE_ITER = os.path.join(_RESULTS, "bench_iteration_time.json")
 
@@ -72,6 +77,16 @@ EXACT_PAGED_NESTED = (("paged", "peak_kv_bytes"), ("paged", "peak_pages"),
                       ("contiguous", "kv_bytes"))
 BANDED_ROW = ("speedup", "useful_tokens", "useful_decode_tokens")
 BANDED_PAGED = ("goodput_ratio",)
+
+# traffic replay: the seeded trace fixes every token, so the counts are
+# exact (tol 0); throughput/speedup regress from below, latency
+# percentiles regress from above (lower is better)
+TRAFFIC_IDENTITY = ("n_requests", "rate_rps", "seed", "max_batch",
+                    "decode_block", "prompt_lens", "gens")
+TRAFFIC_EXACT = ("prompt_tokens", "generated_tokens")
+TRAFFIC_BANDED = ("requests_per_s", "wall_speedup")
+TRAFFIC_BANDED_MAX = ("ttft_p50_s", "ttft_p99_s",
+                      "tpot_p50_s", "tpot_p99_s")
 
 # train loop: workload identity exact, wall-clock speedups banded
 TRAIN_IDENTITY = ("model", "family", "workers", "H", "steps",
@@ -107,6 +122,16 @@ def _cmp_banded(problems, where, key, base, fresh, tol):
                         f"band)")
 
 
+def _cmp_banded_max(problems, where, key, base, fresh, tol):
+    """Lower-is-better metric (latency): only an *increase* beyond the
+    band fails; any improvement passes."""
+    ceiling = base * (1.0 + tol)
+    if fresh > ceiling:
+        _fail(problems, f"{where}.{key}: fresh {fresh:.4f} > "
+                        f"{ceiling:.4f} (baseline {base:.4f} + {tol:.0%} "
+                        f"band, lower is better)")
+
+
 def _pair_rows(problems, name, base_rows, fresh_rows):
     if len(base_rows) != len(fresh_rows):
         _fail(problems, f"{name}: baseline has {len(base_rows)} rows, "
@@ -116,7 +141,8 @@ def _pair_rows(problems, name, base_rows, fresh_rows):
 
 
 def _check_section(problems, where, b, f, *, exact, exact_nested,
-                   banded, tol, exact_tol, identity=IDENTITY):
+                   banded, tol, exact_tol, identity=IDENTITY,
+                   banded_max=()):
     """One baseline/fresh row pair.  Missing-key policy is uniform:
     keys absent from the *baseline* are skipped (an older baseline
     simply doesn't gate the newer metric); a gated key absent from the
@@ -147,6 +173,9 @@ def _check_section(problems, where, b, f, *, exact, exact_nested,
     for key in banded:
         if key in b and present(where, key, f):
             _cmp_banded(problems, where, key, b[key], f[key], tol)
+    for key in banded_max:
+        if key in b and present(where, key, f):
+            _cmp_banded_max(problems, where, key, b[key], f[key], tol)
 
 
 def compare(baseline: dict, fresh: dict, *, tol: float,
@@ -166,6 +195,23 @@ def compare(baseline: dict, fresh: dict, *, tol: float,
             problems, f"paged_rows[batch={b.get('max_batch')}]", b, f,
             exact=EXACT_PAGED, exact_nested=EXACT_PAGED_NESTED,
             banded=BANDED_PAGED, tol=tol, exact_tol=exact_tol)
+    return problems
+
+
+def compare_traffic(baseline: dict, fresh: dict, *, tol: float
+                    ) -> list[str]:
+    """The traffic-replay report (``bench_traffic.json``): trace counts
+    exact (the seeded trace fixes every token), throughput/speedup
+    banded from below, latency percentiles banded from above."""
+    problems: list[str] = []
+    for b, f in _pair_rows(problems, "traffic_rows",
+                           baseline.get("rows", []),
+                           fresh.get("rows", [])):
+        _check_section(
+            problems, f"traffic_rows[rate={b.get('rate_rps')}]", b, f,
+            exact=TRAFFIC_EXACT, exact_nested=(), banded=TRAFFIC_BANDED,
+            banded_max=TRAFFIC_BANDED_MAX, tol=tol, exact_tol=0.0,
+            identity=TRAFFIC_IDENTITY)
     return problems
 
 
@@ -234,13 +280,16 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--baseline-train", default=BASELINE_TRAIN)
     ap.add_argument("--baseline-iteration", default=BASELINE_ITER)
+    ap.add_argument("--baseline-traffic", default=BASELINE_TRAFFIC)
     ap.add_argument("--fresh", default=None,
                     help="existing fresh serve report (skip the bench)")
+    ap.add_argument("--fresh-traffic", default=None,
+                    help="existing fresh traffic-replay report")
     ap.add_argument("--fresh-train", default=None,
                     help="existing fresh train-loop report")
     ap.add_argument("--fresh-iteration", default=None,
                     help="existing fresh iteration-time report")
-    ap.add_argument("--only", default="serve,train,iteration",
+    ap.add_argument("--only", default="serve,traffic,train,iteration",
                     help="comma list of gates to run")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="tolerance band for wall-clock metrics")
@@ -248,7 +297,7 @@ def main(argv=None) -> int:
                     help="band for deterministic metrics")
     args = ap.parse_args(argv)
     gates = {g.strip() for g in args.only.split(",") if g.strip()}
-    unknown = gates - {"serve", "train", "iteration"}
+    unknown = gates - {"serve", "traffic", "train", "iteration"}
     if unknown:
         ap.error(f"unknown gates {sorted(unknown)}")
 
@@ -266,6 +315,18 @@ def main(argv=None) -> int:
             return rc
         problems += compare(baseline, fresh, tol=args.tol,
                             exact_tol=args.exact_tol)
+
+    if "traffic" in gates:
+        baseline = _load_baseline(args.baseline_traffic,
+                                  "make serve-bench")
+        if baseline is None:
+            return 1
+        from benchmarks import bench_traffic
+        fresh, rc = _fresh_report(args.fresh_traffic, bench_traffic.main,
+                                  ["--smoke"], "bench_traffic")
+        if rc != 0:
+            return rc
+        problems += compare_traffic(baseline, fresh, tol=args.tol)
 
     if "train" in gates:
         baseline = _load_baseline(args.baseline_train, "make train-bench")

@@ -63,6 +63,10 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="pool pages incl. trash page (default: worst "
                          "case); smaller pools defer admission")
+    ap.add_argument("--serial-admission", action="store_true",
+                    help="disable per-tick batched admission (one "
+                         "prefill + one sync per request — the "
+                         "equivalence oracle; identical greedy tokens)")
     args = ap.parse_args(argv)
 
     from ..configs import get_arch
@@ -116,17 +120,21 @@ def main(argv=None) -> int:
                      prefill_chunk=args.prefill_chunk,
                      kv_backend=args.kv_backend,
                      page_size=args.page_size,
-                     kv_pages=args.kv_pages),
+                     kv_pages=args.kv_pages,
+                     batched_admission=not args.serial_admission),
         frontend=arch.frontend)
 
     completions = engine.generate(requests)
+    engine.take_completed()     # drain the bounded completion history
     st = engine.stats
     n_dec = st.decode_tokens
     ms_tok = (st.decode_time_s / n_dec * 1e3) if n_dec else 0.0
     print(f"arch={args.arch} requests={st.requests_completed} "
           f"prompt_tokens={st.prompt_tokens} "
           f"generated={st.generated_tokens}")
-    print(f"prefill={st.prefill_time_s * 1e3:.1f}ms  "
+    print(f"prefill={st.prefill_time_s * 1e3:.1f}ms "
+          f"({st.prefill_batches} batched prefills / {st.admit_ticks} "
+          f"admit ticks)  "
           f"decode {n_dec} steps={st.decode_time_s * 1e3:.1f}ms "
           f"({ms_tok:.1f} ms/tok, {st.decode_tokens_per_s:.1f} tok/s)")
     print(f"ttft mean={st.mean_ttft_s * 1e3:.1f}ms  "

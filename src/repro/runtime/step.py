@@ -36,7 +36,8 @@ from ..optim.optimizers import Optimizer
 __all__ = ["TrainState", "StepConfig", "init_train_state",
            "make_train_step", "make_phase_steps", "make_period_step",
            "make_prefill_step", "make_decode_step",
-           "make_slot_prefill_step", "make_slot_refeed_step",
+           "make_slot_prefill_step", "make_slot_prefill_step_batched",
+           "make_slot_refeed_step", "make_slot_refeed_step_batched",
            "make_slot_decode_step", "make_slot_decode_step_paged"]
 
 PyTree = Any
@@ -285,6 +286,19 @@ def _slot_write(arena, new, slot):
             a, n.astype(a.dtype), slot, axis=_SLOT_AXIS), arena, new)
 
 
+def _slots_view(arena, slots):
+    """K-lane view ``[layers, K, ...]`` of the arena at ``slots [K]``
+    (traced index vector: no recompile per slot assignment)."""
+    return jax.tree.map(lambda a: jnp.take(a, slots, axis=_SLOT_AXIS),
+                        arena)
+
+
+def _slots_write(arena, new, slots):
+    """Scatter a K-lane cache back into the arena at ``slots [K]``."""
+    return jax.tree.map(
+        lambda a, n: a.at[:, slots].set(n.astype(a.dtype)), arena, new)
+
+
 def make_slot_prefill_step(model, *, with_frontend: str | None = None):
     """Prefill one request into arena slot ``slot``.
 
@@ -317,6 +331,59 @@ def make_slot_refeed_step(model):
         return logits, _slot_write(arena, new, slot)
 
     return refeed
+
+
+def make_slot_prefill_step_batched(model, *,
+                                   with_frontend: str | None = None):
+    """Prefill K same-length requests into arena slots ``slots`` in ONE
+    call.
+
+    ``tokens`` is ``[K, S]`` (one row per admitted request, all padded to
+    the same bucket length), ``slots [K]`` a traced index vector, and any
+    frontend ``extra`` inputs arrive stacked ``[K, ...]``.  The model's
+    own batched ``prefill`` runs over the K gathered lanes (every lane
+    writes from position 0, which is exactly the native prefill
+    contract), so the whole admission group costs one executable launch
+    instead of K.  Compiles once per ``(K, S)`` — both are bounded
+    (``K <= max_batch``, ``S`` by the prompt-length buckets), so the
+    compile-cache contract of the serial path is preserved.
+
+    Returns (last-token logits ``[K, V]``, updated arena).
+    """
+    prefill = make_prefill_step(model, with_frontend=with_frontend)
+
+    def slot_prefill_batched(params, arena, tokens, slots, *extra):
+        logits, new = prefill(params, tokens, _slots_view(arena, slots),
+                              *extra)
+        return logits[:, 0], _slots_write(arena, new, slots)
+
+    return slot_prefill_batched
+
+
+def make_slot_refeed_step_batched(model):
+    """Re-decode the last prompt token of K slots in ONE call.
+
+    The batched counterpart of :func:`make_slot_refeed_step`: ``slots
+    [K]`` / ``tokens [K]`` / ``pos [K]`` — each lane rewrites its own KV
+    entry at its own position (vmapped over the gathered lanes, same
+    per-lane semantics as the serial refeed).  Returns (logits ``[K,
+    V]``, updated arena).
+    """
+    def one(cache_i, token, pos, params):
+        cache_i = jax.tree.map(lambda a: a[:, None], cache_i)
+        logits, new = model.decode_step(params, cache_i, token[None, None],
+                                        pos[None])
+        return logits[0, 0], jax.tree.map(lambda a: a[:, 0], new)
+
+    def slot_refeed_batched(params, arena, slots, tokens, pos):
+        sub = _slots_view(arena, slots)
+        axes = jax.tree.map(lambda _: _SLOT_AXIS, sub)
+        logits, new = jax.vmap(
+            one, in_axes=(axes, 0, 0, None),
+            out_axes=(0, axes))(sub, tokens, pos, params)
+        return logits, _slots_write(arena, new, slots)
+
+    return slot_refeed_batched
 
 
 def make_slot_decode_step(model):

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CachePool", "PagedCachePool", "make_prefill_scatter"]
+__all__ = ["CachePool", "PagedCachePool", "make_prefill_scatter",
+           "make_prefill_scatter_batched"]
 
 PyTree = Any
 
@@ -121,6 +122,31 @@ def make_prefill_scatter(page_size: int):
             return pg.at[:, bt_row].set(blocks.astype(pg.dtype))
 
         return jax.tree.map(one, pages, scratch)
+
+    return scatter
+
+
+def make_prefill_scatter_batched(page_size: int):
+    """Batched :func:`make_prefill_scatter`: copy K freshly prefilled
+    lanes into the page pool in ONE scatter.
+
+    ``lanes`` leaves are ``[layers, K, max_seq, ...]`` (the transient
+    prefill lanes of one admission group); ``bt_rows [K, max_blocks]``
+    the admitted slots' block-table rows.  Every block of every lane is
+    scattered unconditionally — rows are trash-page-padded past each
+    slot's allocated prefix, so pad blocks land on page 0 (which is
+    never read; colliding trash writes across lanes are harmless).
+    """
+
+    def scatter(pages: PyTree, lanes: PyTree, bt_rows) -> PyTree:
+        k, max_blocks = bt_rows.shape
+
+        def one(pg, ln):
+            blocks = ln.reshape(
+                (pg.shape[0], k, max_blocks, page_size) + ln.shape[3:])
+            return pg.at[:, bt_rows].set(blocks.astype(pg.dtype))
+
+        return jax.tree.map(one, pages, lanes)
 
     return scatter
 
@@ -238,6 +264,13 @@ class PagedCachePool(CachePool):
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
 
+    def extend_many(self, pairs) -> None:
+        """Materialize pages for several slots at once: ``pairs`` is an
+        iterable of ``(slot, n_tokens)`` — one admission group's worth of
+        :meth:`extend` calls, kept host-side and cheap."""
+        for slot, n_tokens in pairs:
+            self.extend(slot, n_tokens)
+
     def free(self, slot: int) -> None:
         super().free(slot)
         self._free_pages.extend(reversed(self._pages_of[slot]))
@@ -255,6 +288,10 @@ class PagedCachePool(CachePool):
     # ----------------------------------------------------------- accounting
     def block_table_row(self, slot: int) -> jax.Array:
         return jnp.asarray(self.block_tables[slot])
+
+    def block_table_rows(self, slots) -> jax.Array:
+        """``[K, max_blocks]`` device rows for one admission group."""
+        return jnp.asarray(self.block_tables[np.asarray(slots, np.int64)])
 
     def device_block_tables(self) -> jax.Array:
         return jnp.asarray(self.block_tables)

@@ -64,6 +64,20 @@ class EngineConfig:
         the contiguous footprint).  Sizing it below worst case is where
         the memory win comes from: admission defers (requests queue)
         instead of over-committing when pages run short.
+    ``batched_admission``
+        ``True`` (default): each tick's admissions are grouped by
+        prefill-shape bucket and every group prefills in ONE
+        slot-batched call, with all first tokens of the tick landing in
+        a single host sync — the fix for per-request prefill dispatch
+        serializing admission-heavy traffic.  ``False`` keeps the
+        original one-prefill-one-sync-per-request path (the equivalence
+        oracle; token streams are identical under greedy decoding).
+    ``completed_cap``
+        Retained-history bound for completions nobody drains: the
+        engine keeps at most this many finished :class:`Completion`
+        records for :meth:`~repro.serve.engine.ServeEngine.take_completed`
+        (oldest dropped first), so a long-running server that never
+        calls ``reset()`` holds bounded memory.
     """
 
     max_batch: int = 8
@@ -75,6 +89,8 @@ class EngineConfig:
     kv_backend: str = "contiguous"
     page_size: int = 16
     kv_pages: int | None = None
+    batched_admission: bool = True
+    completed_cap: int = 1024
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -85,6 +101,8 @@ class EngineConfig:
             raise ValueError("decode_block must be >= 1")
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if self.completed_cap < 1:
+            raise ValueError("completed_cap must be >= 1")
         if self.kv_backend not in ("contiguous", "paged"):
             raise ValueError(
                 f"kv_backend must be 'contiguous' or 'paged', "

@@ -7,11 +7,16 @@ and the decode hot path is one fused, jitted ``lax.while_loop`` over the
 whole slot set with per-slot EOS/length masking — finished lanes stop
 emitting and the block exits early once every lane is done.
 
-Shapes are fixed by :class:`~repro.serve.config.EngineConfig`: admitting a
-request prefills one arena slot (compiled once per prompt length, or per
-``prefill_chunk`` bucket), and every decode tick runs the same
-``[n_slots]``-wide executable regardless of how many requests are in
-flight — admission/retirement never recompiles and never reallocates.
+Shapes are fixed by :class:`~repro.serve.config.EngineConfig`: each tick's
+admissions are grouped by prefill-shape bucket and every group prefills
+its slots in ONE slot-batched launch (compiled once per (group size,
+bucket length)), all first tokens of the tick reaching the host in a
+single sync; every decode tick runs the same ``[n_slots]``-wide
+executable regardless of how many requests are in flight — admission and
+retirement never reallocate, and the executable set stays bounded.
+``EngineConfig(batched_admission=False)`` keeps the original
+one-prefill-per-request path, the equivalence oracle: both paths emit
+token-for-token identical streams under greedy decoding.
 
 Two entry points::
 
@@ -24,6 +29,7 @@ Two entry points::
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
@@ -31,10 +37,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..lint import hot_path
-from ..runtime.step import (make_slot_decode_step,
+from ..runtime.step import (make_prefill_step, make_slot_decode_step,
                             make_slot_decode_step_paged,
-                            make_slot_prefill_step, make_slot_refeed_step)
-from .cache import CachePool, PagedCachePool, make_prefill_scatter
+                            make_slot_prefill_step,
+                            make_slot_prefill_step_batched,
+                            make_slot_refeed_step,
+                            make_slot_refeed_step_batched)
+from .cache import (CachePool, PagedCachePool, make_prefill_scatter,
+                    make_prefill_scatter_batched)
 from .config import EngineConfig
 from .sampling import make_token_sampler
 from .scheduler import RequestState, Scheduler
@@ -179,7 +189,8 @@ class ServeEngine:
             max_prefills_per_tick=self.config.max_prefills_per_tick)
         self._state = _init_slot_state(self.config.slots)
         self._stats = EngineStats()
-        self._completed: list[Completion] = []
+        self._completed: deque[Completion] = deque(
+            maxlen=self.config.completed_cap)
 
         # compiled once per engine; prefill additionally caches one
         # executable per distinct prompt length (or chunk bucket).  With
@@ -220,6 +231,74 @@ class ServeEngine:
 
         self._admit_update = jax.jit(admit_update)
 
+        # ------- batched admission: one launch + one sync per tick group.
+        # Each jitted step below is the K-wide counterpart of a serial
+        # step above; executables are keyed by (K, S) with K <= max_batch
+        # and S bounded by the prompt-length buckets, so the cache stays
+        # bounded exactly like the serial path's.
+        self._prefill_batched = jax.jit(
+            make_slot_prefill_step_batched(model, with_frontend=frontend))
+        self._refeed_batched = jax.jit(make_slot_refeed_step_batched(model))
+
+        def first_sample_batched(logits, temp, top_k, seed, eos, max_gen):
+            # identical per-request streams to the serial path: every lane
+            # splits its own PRNGKey(seed), so seeded sampling stays
+            # batch-independent by construction
+            keys = jax.vmap(
+                lambda s: jax.random.split(jax.random.PRNGKey(s)))(seed)
+            tok = sampler(logits, temp, top_k, keys[:, 0])
+            # liveness on device so the whole tick needs ONE host sync
+            # (eos is -1 for "no stop token"; sampled ids are >= 0)
+            active = (max_gen > 1) & (tok != eos)
+            return tok, keys[:, 1], active
+
+        self._first_sample_batched = jax.jit(first_sample_batched)
+
+        def admit_update_batched(st: _SlotState, slots, token, pos, active,
+                                 temp, top_k, key, eos, max_gen):
+            return _SlotState(
+                token=st.token.at[slots].set(token),
+                pos=st.pos.at[slots].set(pos),
+                ngen=st.ngen.at[slots].set(1),
+                active=st.active.at[slots].set(active),
+                temp=st.temp.at[slots].set(temp),
+                top_k=st.top_k.at[slots].set(top_k),
+                key=st.key.at[slots].set(key),
+                eos=st.eos.at[slots].set(eos),
+                max_gen=st.max_gen.at[slots].set(max_gen))
+
+        self._admit_update_batched = jax.jit(admit_update_batched)
+
+        if self._paged:
+            # the batched paged admit is ONE jitted call end to end: a
+            # transient K-lane contiguous cache is built *inside* the
+            # trace (init_cache is zeros + broadcast, so nothing
+            # persistent grows — the pool's single scratch lane remains
+            # the only provisioned prefill memory), prefilled, optionally
+            # refed, and every lane's finished blocks land in the pages
+            # through one batched scatter.
+            raw_prefill = make_prefill_step(model, with_frontend=frontend)
+            scatter_b = make_prefill_scatter_batched(self.config.page_size)
+            refeed_lanes = make_slot_refeed_step_batched(model)
+            max_seq = self.config.max_seq
+
+            def paged_admit(params, pages, tokens, bt_rows, *extra):
+                lanes = model.init_cache(tokens.shape[0], max_seq)
+                logits, lanes = raw_prefill(params, tokens, lanes, *extra)
+                return logits[:, 0], scatter_b(pages, lanes, bt_rows)
+
+            def paged_admit_refeed(params, pages, tokens, bt_rows,
+                                   rf_tok, rf_pos, *extra):
+                k = tokens.shape[0]
+                lanes = model.init_cache(k, max_seq)
+                _, lanes = raw_prefill(params, tokens, lanes, *extra)
+                logits, lanes = refeed_lanes(params, lanes, jnp.arange(k),
+                                             rf_tok, rf_pos)
+                return logits, scatter_b(pages, lanes, bt_rows)
+
+            self._paged_admit = jax.jit(paged_admit)
+            self._paged_admit_refeed = jax.jit(paged_admit_refeed)
+
     # ----------------------------------------------------------- submission
     def _prefix_len(self, req: Request) -> int:
         """Cache positions consumed before the prompt (vision patches are
@@ -229,27 +308,42 @@ class ServeEngine:
         return 0
 
     def submit(self, request: Request,
-               on_token: Callable | None = None) -> int:
+               on_token: Callable | None = None, *,
+               submit_t: float | None = None) -> int:
         """Queue a request; returns its id.  ``on_token(request_id, token,
-        index)`` streams every generated token as it is harvested."""
+        index)`` streams every generated token as it is harvested.
+
+        ``submit_t`` (``time.perf_counter()`` domain) backdates the
+        request's arrival so traffic replay preserves queueing delay in
+        TTFT/latency; default is now.
+        """
         s = len(request.tokens)
         if not s:
             raise ValueError("empty prompt")
         if request.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        prefix = self._prefix_len(request)
         padded = s
         if self.config.prefill_chunk:
             chunk = self.config.prefill_chunk
             padded = s + (-s) % chunk
-        need = self._prefix_len(request) \
-            + max(s + request.max_new_tokens, padded)
-        if need > self.config.max_seq:
+        # Lane depth and pool commitment are different bounds.  The lane
+        # must be deep enough for every position prefill or decode ever
+        # *writes* — chunk padding included, hence the max() — but pad
+        # positions never materialize pages (the scatter routes them to
+        # the trash page), so the pool is offered only the real footprint:
+        # committing the padded depth would wrongly defer admission for
+        # requests that do fit, exactly at the capacity boundary.
+        lane_depth = prefix + max(s + request.max_new_tokens, padded)
+        if lane_depth > self.config.max_seq:
             raise ValueError(
-                f"request {request.request_id} needs {need} cache slots "
-                f"(> max_seq={self.config.max_seq}); raise "
+                f"request {request.request_id} needs {lane_depth} cache "
+                f"slots (> max_seq={self.config.max_seq}); raise "
                 f"EngineConfig.max_seq or shorten the request")
-        rs = RequestState(request, on_token=on_token,
-                          submit_t=time.perf_counter(), need_tokens=need)
+        rs = RequestState(
+            request, on_token=on_token,
+            submit_t=time.perf_counter() if submit_t is None else submit_t,
+            need_tokens=prefix + s + request.max_new_tokens)
         self.scheduler.submit(rs)
         return request.request_id
 
@@ -267,11 +361,17 @@ class ServeEngine:
         out = {}
         fns = [("prefill", self._slot_prefill),
                ("refeed", self._refeed),
+               ("prefill_batched", self._prefill_batched),
+               ("refeed_batched", self._refeed_batched),
                ("decode_block", self._decode_block),
                ("first_sample", self._first_sample),
-               ("admit_update", self._admit_update)]
+               ("first_sample_batched", self._first_sample_batched),
+               ("admit_update", self._admit_update),
+               ("admit_update_batched", self._admit_update_batched)]
         if self._paged:
-            fns.append(("prefill_scatter", self._prefill_scatter))
+            fns += [("prefill_scatter", self._prefill_scatter),
+                    ("paged_admit", self._paged_admit),
+                    ("paged_admit_refeed", self._paged_admit_refeed)]
         for name, fn in fns:
             size = getattr(fn, "_cache_size", None)
             out[name] = size() if callable(size) else -1
@@ -342,6 +442,111 @@ class ServeEngine:
         if not active:
             finished.append(self._finish_slot(slot))
 
+    def _bucket_key(self, rs: RequestState):
+        """Prefill-shape bucket: requests in one group share one
+        executable.  (padded prompt length, needs-refeed, frontend extra
+        shapes) — the three things that decide the traced shapes and
+        whether a refeed step follows, so grouping can never mix a padded
+        lane into an exact-prefill launch (which would change tokens)."""
+        s = len(rs.request.tokens)
+        chunk = self.config.prefill_chunk
+        padded = s + (-s) % chunk if chunk else s
+        return (padded, padded != s,
+                tuple(np.shape(a) for a in rs.request.extra))
+
+    @hot_path
+    def _admit_batch(self, groups, finished: list[Completion]) -> None:
+        """Admit one tick's admissions: ONE slot-batched prefill launch
+        per shape bucket, and ONE host sync for every first token of the
+        tick.
+
+        Token-for-token equivalent to running :meth:`_admit` serially
+        over the same set (greedy; seeded sampling streams are per-lane
+        identical — see ``first_sample_batched``): the batched prefill
+        runs the model's native batched ``prefill`` over the gathered
+        lanes, every lane writing from position 0 exactly as its own
+        serial call would.
+        """
+        t0 = time.perf_counter()
+        pending = []
+        for _key, members in groups:
+            slots = [slot for slot, _ in members]
+            reqs = [rs.request for _, rs in members]
+            k = len(members)
+            lens = [len(r.tokens) for r in reqs]
+            chunk = self.config.prefill_chunk
+            padded = lens[0] + (-lens[0]) % chunk if chunk else lens[0]
+            needs_refeed = padded != lens[0]
+            toks = np.zeros((k, padded), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, :len(r.tokens)] = r.tokens
+            extra = tuple(
+                jnp.asarray(np.stack([r.extra[j] for r in reqs]))
+                for j in range(len(reqs[0].extra)))
+            prefix = self._prefix_len(reqs[0])
+            pos = [prefix + s for s in lens]
+            sps = [r.sampling or SamplingParams() for r in reqs]
+            temp = jnp.asarray([sp.temperature for sp in sps], jnp.float32)
+            top_k = jnp.asarray([sp.top_k for sp in sps], jnp.int32)
+            seed = jnp.asarray([sp.seed for sp in sps], jnp.int32)
+            eos = jnp.asarray([-1 if r.eos_id is None else r.eos_id
+                               for r in reqs], jnp.int32)
+            max_gen = jnp.asarray([r.max_new_tokens for r in reqs],
+                                  jnp.int32)
+            rf_tok = jnp.asarray([r.tokens[-1] for r in reqs], jnp.int32)
+            rf_pos = jnp.asarray([p - 1 for p in pos], jnp.int32)
+            tokens_dev = jnp.asarray(toks)
+            slots_dev = jnp.asarray(slots, jnp.int32)
+
+            if self._paged:
+                self.pool.extend_many(
+                    (slot, prefix + s)
+                    for slot, s in zip(slots, lens, strict=True))
+                bt_rows = self.pool.block_table_rows(slots)
+                if needs_refeed:
+                    logits, self.pool.arena = self._paged_admit_refeed(
+                        self.params, self.pool.arena, tokens_dev, bt_rows,
+                        rf_tok, rf_pos, *extra)
+                else:
+                    logits, self.pool.arena = self._paged_admit(
+                        self.params, self.pool.arena, tokens_dev, bt_rows,
+                        *extra)
+            else:
+                logits, arena = self._prefill_batched(
+                    self.params, self.pool.arena, tokens_dev, slots_dev,
+                    *extra)
+                if needs_refeed:
+                    logits, arena = self._refeed_batched(
+                        self.params, arena, slots_dev, rf_tok, rf_pos)
+                self.pool.arena = arena
+
+            tok, key, active = self._first_sample_batched(
+                logits, temp, top_k, seed, eos, max_gen)
+            self._state = self._admit_update_batched(
+                self._state, slots_dev, tok, jnp.asarray(pos, jnp.int32),
+                active, temp, top_k, key, eos, max_gen)
+            self._stats.prefill_batches += 1
+            self._stats.prompt_tokens += sum(lens)
+            pending.append((members, tok, active))
+
+        # ONE host sync for the whole tick: every group's first tokens
+        # and liveness land in a single transfer, and its completion is
+        # the shared first-token timestamp — each request's TTFT is still
+        # measured from its own submit_t, so queueing delay stays
+        # per-request.
+        host = jax.device_get([(tok, act) for _, tok, act in pending])
+        now = time.perf_counter()
+        self._stats.prefill_time_s += now - t0
+        self._stats.admit_ticks += 1
+        for (members, _, _), (tok_h, act_h) in zip(pending, host,
+                                                   strict=True):
+            for (slot, rs), t, a in zip(members, tok_h.tolist(),
+                                        act_h.tolist(), strict=True):
+                rs.first_token_t = now
+                rs.emit(t)
+                if not a:
+                    finished.append(self._finish_slot(slot))
+
     def _finish_slot(self, slot: int) -> Completion:
         rs = self.scheduler.finish(slot)
         req = rs.request
@@ -367,8 +572,16 @@ class ServeEngine:
         """One scheduling tick: admit into free slots, then run one fused
         decode block.  Returns requests that finished this tick."""
         finished: list[Completion] = []
-        for slot, rs in self.scheduler.admissions():
-            self._admit(slot, rs, finished)
+        if self.config.batched_admission:
+            groups = self.scheduler.admission_groups(self._bucket_key)
+            if groups:
+                self._admit_batch(groups, finished)
+        else:
+            admitted = self.scheduler.admissions()
+            if admitted:
+                self._stats.admit_ticks += 1
+            for slot, rs in admitted:
+                self._admit(slot, rs, finished)
 
         if self.scheduler.running:
             if self._paged:
@@ -460,6 +673,18 @@ class ServeEngine:
         return jnp.asarray(out)
 
     # -------------------------------------------------------------- control
+    def take_completed(self) -> list[Completion]:
+        """Drain and return the retained completion history, oldest first.
+
+        The engine keeps at most ``config.completed_cap`` finished
+        requests (oldest dropped); draining transfers ownership to the
+        caller, so a long-running server loop that polls this holds
+        bounded memory instead of accreting every completion forever.
+        """
+        out = list(self._completed)
+        self._completed.clear()
+        return out
+
     def drain(self) -> list[Completion]:
         """Step until idle; returns everything that finished."""
         out: list[Completion] = []
@@ -475,5 +700,5 @@ class ServeEngine:
         self.scheduler.reset()
         self._state = _init_slot_state(self.config.slots)
         self._stats = EngineStats()
-        self._completed = []
+        self._completed.clear()
         return self

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Any, Callable, Hashable
 
 from .cache import CachePool
 from .types import Request
@@ -57,9 +57,18 @@ class Scheduler:
         self.max_prefills_per_tick = max_prefills_per_tick
         self.waiting: deque[RequestState] = deque()
         self.running: dict[int, RequestState] = {}     # slot -> state
+        self.in_flight_ids: set[Any] = set()           # waiting + running
 
     # --------------------------------------------------------------- queues
     def submit(self, rs: RequestState) -> None:
+        rid = rs.request.request_id
+        if rid in self.in_flight_ids:
+            raise ValueError(
+                f"request_id {rid!r} is already in flight — completions "
+                "are keyed by id, so a duplicate would be silently "
+                "dropped; wait for the first submission to finish or use "
+                "a fresh id")
+        self.in_flight_ids.add(rid)
         self.waiting.append(rs)
 
     def admissions(self) -> list[tuple[int, RequestState]]:
@@ -84,10 +93,29 @@ class Scheduler:
             out.append((slot, rs))
         return out
 
+    def admission_groups(self, key: Callable[[RequestState], Hashable]
+                         ) -> list[tuple[Hashable, list[tuple[int,
+                                                              "RequestState"]]]]:
+        """Pop this tick's admissions and group them by prefill bucket.
+
+        Admission itself stays FIFO and capacity-aware (exactly
+        :meth:`admissions` — grouping never changes *who* is admitted,
+        only how the admitted set is executed): the popped set is
+        partitioned by ``key(rs)`` — the engine's prefill-shape bucket
+        (padded prompt length, refeed-or-not, frontend extra shapes) —
+        so each group can prefill in one slot-batched call.  Groups come
+        back in first-appearance order; members keep FIFO order.
+        """
+        groups: dict[Hashable, list[tuple[int, RequestState]]] = {}
+        for slot, rs in self.admissions():
+            groups.setdefault(key(rs), []).append((slot, rs))
+        return list(groups.items())
+
     def finish(self, slot: int) -> RequestState:
         """Retire the request in ``slot`` and free the slot for reuse."""
         rs = self.running.pop(slot)
         rs.slot = None
+        self.in_flight_ids.discard(rs.request.request_id)
         self.pool.free(slot)
         return rs
 
@@ -98,4 +126,5 @@ class Scheduler:
     def reset(self) -> None:
         self.waiting.clear()
         self.running.clear()
+        self.in_flight_ids.clear()
         self.pool.reset()

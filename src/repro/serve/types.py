@@ -69,6 +69,10 @@ class EngineStats:
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
     decode_ticks: int = 0                  # fused-block invocations
+    prefill_batches: int = 0               # slot-batched prefill launches
+    admit_ticks: int = 0                   # ticks that admitted >= 1 request
+                                           # (= shared first-token host syncs
+                                           # under batched admission)
     slot_ticks_active: int = 0             # sum over ticks of active slots
     slot_ticks_total: int = 0              # ticks x slots (utilization denom)
     ttft_s: list[float] = field(default_factory=list)
@@ -118,6 +122,8 @@ class EngineStats:
             "prefill_time_s": self.prefill_time_s,
             "decode_time_s": self.decode_time_s,
             "decode_ticks": self.decode_ticks,
+            "prefill_batches": self.prefill_batches,
+            "admit_ticks": self.admit_ticks,
             "decode_tokens": self.decode_tokens,
             "decode_tokens_per_s": self.decode_tokens_per_s,
             "tokens_per_s": self.tokens_per_s,

@@ -1,0 +1,320 @@
+"""Batched admission: one prefill launch per shape bucket, one host sync
+per tick — bitwise-equal to the serial admission oracle.
+
+PR 7's regression fix: per-request prefill dispatch (one executable
+launch + one blocking first-token sync each) serialized admission-heavy
+traffic below the naive loop's length-grouped batching.  These tests pin
+the fix's contract:
+
+* **equivalence** — ``batched_admission=True`` emits token-for-token the
+  same greedy streams as the serial path for every KV family, on both
+  backends, with mixed buckets in one tick and midstream admission;
+* **dispatch accounting** — K same-bucket admissions cost ONE launch and
+  the tick ONE sync (``prefill_batches`` / ``admit_ticks``), and hit one
+  executable (compile-stats pinned across rounds);
+* **latency semantics** — first tokens share the tick's sync timestamp
+  but TTFT stays per-request from ``submit_t``;
+* the satellite bugfixes: completion-history drain/cap, duplicate
+  in-flight id rejection, and the paged footprint commitment at the
+  chunk-padding boundary.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serve import EngineConfig, Request, ServeEngine
+
+# (arch_id, family, backend): every KV family on every backend it supports
+SWEEP = [
+    ("qwen3-1.7b", "transformer", "contiguous"),
+    ("qwen3-1.7b", "transformer", "paged"),
+    ("qwen3-moe-30b-a3b", "moe", "contiguous"),
+    ("qwen3-moe-30b-a3b", "moe", "paged"),
+    ("deepseek-v3-671b", "mla", "paged"),
+    ("mamba2-780m", "mamba2", "contiguous"),
+]
+
+# 5 requests over 4 slots: the first tick admits three distinct buckets
+# (lengths {6, 9, 12}) with one bucket holding two requests, and the
+# fifth request is admitted midstream into a freed slot.
+_PROMPT_LENS = (6, 6, 9, 12, 6)
+_BUDGETS = (5, 3, 7, 2, 6)
+
+
+def _setup(arch_id):
+    arch = get_arch(arch_id)
+    model = arch.make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, model.cfg.vocab, size=n).tolist()
+               for n in _PROMPT_LENS]
+    return arch, model, params, prompts
+
+
+def _cfg(backend, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("decode_block", 4)
+    if backend == "paged":
+        kw.setdefault("kv_backend", "paged")
+        kw.setdefault("page_size", 8)
+    return EngineConfig(**kw)
+
+
+def _tokens(model, params, cfg, prompts, frontend=None, extras=None,
+            budgets=_BUDGETS):
+    eng = ServeEngine(model, params, cfg, frontend=frontend)
+    comps = eng.generate([
+        Request(tokens=p, max_new_tokens=g, extra=e)
+        for p, g, e in zip(prompts, budgets,
+                           extras or [()] * len(prompts), strict=True)])
+    return [c.tokens for c in comps], eng
+
+
+# ---------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("arch_id,family,backend",
+                         SWEEP, ids=[f"{f}-{b}" for _, f, b in SWEEP])
+def test_batched_matches_serial_token_for_token(arch_id, family, backend):
+    """Mixed buckets in one tick + midstream admission: batched admission
+    must reproduce the serial oracle's greedy streams exactly."""
+    _, model, params, prompts = _setup(arch_id)
+    batched, eng = _tokens(model, params, _cfg(backend), prompts)
+    serial, _ = _tokens(model, params,
+                        _cfg(backend, batched_admission=False), prompts)
+    assert batched == serial
+    # 3 buckets in tick 1 (one of size 2), 1 more for the midstream admit
+    assert eng.stats.prefill_batches == 4
+    assert eng.stats.admit_ticks == 2
+
+
+@pytest.mark.parametrize("backend", ["contiguous", "paged"])
+def test_batched_matches_serial_chunked(backend):
+    """Chunk padding: refeed groups batch too, and never mix with
+    exact-length groups (prompt 6 pads to 8 and refeeds; prompt 9 and 12
+    pad to 16)."""
+    _, model, params, prompts = _setup("qwen3-1.7b")
+    cfg = _cfg(backend, prefill_chunk=8)
+    batched, _ = _tokens(model, params, cfg, prompts)
+    serial, _ = _tokens(
+        model, params, _cfg(backend, prefill_chunk=8,
+                            batched_admission=False), prompts)
+    assert batched == serial
+
+
+def test_batched_matches_serial_vision_frontend():
+    """Frontend extras ride along stacked [K, n, d]; the vision prefix
+    shifts every position the same way it does serially."""
+    arch, model, params, prompts = _setup("llava-next-34b")
+    rng = np.random.RandomState(1)
+    extras = [(np.asarray(rng.standard_normal((8, model.cfg.d_model)),
+                          np.float32),) for _ in prompts]
+    batched, _ = _tokens(model, params, _cfg("contiguous"), prompts,
+                         frontend=arch.frontend, extras=extras)
+    serial, _ = _tokens(model, params,
+                        _cfg("contiguous", batched_admission=False),
+                        prompts, frontend=arch.frontend, extras=extras)
+    assert batched == serial
+
+
+def test_batched_seeded_sampling_is_batch_independent():
+    """A sampling request's stream must not depend on what shares its
+    admission group: same request alone vs in a full tick, same tokens
+    (per-lane PRNG streams are derived exactly as the serial path's)."""
+    from repro.serve import SamplingParams
+    _, model, params, prompts = _setup("qwen3-1.7b")
+    sp = SamplingParams(temperature=0.8, top_k=5, seed=42)
+    probe = Request(tokens=prompts[0], max_new_tokens=5, sampling=sp)
+
+    alone = ServeEngine(model, params, _cfg("contiguous")).generate(
+        [Request(tokens=prompts[0], max_new_tokens=5, sampling=sp)])
+    crowd = ServeEngine(model, params, _cfg("contiguous")).generate(
+        [probe] + [Request(tokens=prompts[0], max_new_tokens=5)
+                   for _ in range(3)])
+    assert crowd[0].tokens == alone[0].tokens
+
+
+# ----------------------------------------------------------------- dispatch
+
+def test_same_bucket_tick_is_one_launch_one_sync():
+    """K equal-length admissions in one tick: ONE batched prefill launch,
+    ONE executable, ONE admit sync — and a second same-shape round
+    recompiles nothing."""
+    _, model, params, _ = _setup("qwen3-1.7b")
+    rng = np.random.RandomState(2)
+    eng = ServeEngine(model, params, _cfg("contiguous"))
+    reqs = lambda: [Request(tokens=rng.randint(
+        0, model.cfg.vocab, size=8).tolist(), max_new_tokens=4)
+        for _ in range(4)]
+    eng.generate(reqs())
+    assert eng.stats.prefill_batches == 1
+    assert eng.stats.admit_ticks == 1
+    misses = eng.compile_stats()
+    assert misses["prefill_batched"] == 1      # one (K=4, S=8) executable
+    assert misses["prefill"] == 0              # serial path never ran
+    eng.generate(reqs())
+    assert eng.compile_stats() == misses, "same-shape round recompiled"
+    assert eng.stats.prefill_batches == 2
+
+
+def test_serial_path_unused_under_batched_admission():
+    _, model, params, prompts = _setup("qwen3-1.7b")
+    _, eng = _tokens(model, params, _cfg("contiguous"), prompts)
+    stats = eng.compile_stats()
+    assert stats["prefill"] == 0 and stats["refeed"] == 0
+    assert stats["first_sample"] == 0
+    assert stats["prefill_batched"] > 0
+
+
+# ------------------------------------------------------------ TTFT semantics
+
+def test_ttft_is_per_request_under_shared_sync():
+    """Requests admitted in the same tick share one first-token timestamp
+    but keep their own submit time: backdating one submission by 1s must
+    show up as exactly +1s of TTFT relative to its tickmate."""
+    _, model, params, _ = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params, _cfg("contiguous"))
+    now = time.perf_counter()
+    toks = list(range(1, 9))
+    eng.submit(Request(tokens=toks, max_new_tokens=3, request_id="early"),
+               submit_t=now - 1.0)
+    eng.submit(Request(tokens=toks, max_new_tokens=3, request_id="late"),
+               submit_t=now)
+    comps = {c.request_id: c for c in eng.drain()}
+    assert eng.stats.admit_ticks == 1          # same tick, shared sync
+    delta = comps["early"].ttft_s - comps["late"].ttft_s
+    assert abs(delta - 1.0) < 1e-6
+    assert comps["late"].ttft_s > 0
+
+
+def test_prefill_time_attributed_once_per_tick():
+    """prefill_time_s is measured tick-wide (admission start -> shared
+    sync), not summed per request: admitting K at once must not count
+    the wall K times, so the mean TTFT can't exceed tick wall time."""
+    _, model, params, _ = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params, _cfg("contiguous"))
+    t0 = time.perf_counter()
+    for i in range(4):
+        eng.submit(Request(tokens=list(range(1, 9)), max_new_tokens=2))
+    eng.drain()
+    wall = time.perf_counter() - t0
+    assert eng.stats.admit_ticks == 1
+    assert eng.stats.prefill_time_s <= wall
+
+
+# ------------------------------------------------------- completion history
+
+def test_take_completed_drains_and_caps():
+    _, model, params, prompts = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params,
+                      _cfg("contiguous", completed_cap=2))
+    comps = eng.generate([Request(tokens=p, max_new_tokens=2)
+                          for p in prompts])
+    assert len(comps) == len(prompts)
+    kept = eng.take_completed()
+    assert [c.request_id for c in kept] == \
+        [c.request_id for c in comps[-2:]], \
+        "history must keep the newest completed_cap completions"
+    assert eng.take_completed() == [], "drain must transfer ownership"
+
+
+def test_completed_history_bounded_without_drain():
+    _, model, params, _ = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params,
+                      _cfg("contiguous", completed_cap=3))
+    for i in range(7):
+        eng.generate([Request(tokens=list(range(1, 7)),
+                              max_new_tokens=1)])
+    assert len(eng.take_completed()) == 3
+
+
+# ------------------------------------------------------------- duplicate ids
+
+def test_duplicate_in_flight_request_id_rejected_on_submit():
+    _, model, params, _ = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params, _cfg("contiguous"))
+    eng.submit(Request(tokens=[1, 2, 3], max_new_tokens=4,
+                       request_id="dup"))
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.submit(Request(tokens=[4, 5, 6], max_new_tokens=4,
+                           request_id="dup"))
+    eng.drain()
+    # retired ids may be reused — only *concurrent* duplicates collide
+    eng.submit(Request(tokens=[7, 8, 9], max_new_tokens=2,
+                       request_id="dup"))
+    assert len(eng.drain()) == 1
+
+
+def test_duplicate_request_id_rejected_in_generate():
+    """generate() keys its completion map by id, so a concurrent
+    duplicate would silently drop a result — it must raise instead."""
+    _, model, params, _ = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params, _cfg("contiguous"))
+    reqs = [Request(tokens=[1, 2, 3], max_new_tokens=2, request_id=9),
+            Request(tokens=[4, 5, 6], max_new_tokens=2, request_id=9)]
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.generate(reqs)
+
+
+# -------------------------------------------------------- footprint boundary
+
+def test_contiguous_admission_exactly_at_max_seq():
+    """prefix-less request with s + max_new == max_seq is admissible;
+    one more token is not."""
+    _, model, params, _ = _setup("qwen3-1.7b")
+    eng = ServeEngine(model, params,
+                      _cfg("contiguous", max_batch=1, max_seq=16))
+    comp = eng.generate([Request(tokens=list(range(1, 13)),
+                                 max_new_tokens=4)])[0]
+    assert len(comp.tokens) == 4
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(tokens=list(range(1, 14)), max_new_tokens=4))
+
+
+def test_paged_commitment_is_real_footprint_not_padded_depth():
+    """Chunk padding must not inflate the page commitment: pad positions
+    scatter to the trash page and never need real pages, so a pool with
+    exactly ceil((s + max_new) / page) usable pages admits a request
+    whose *padded* depth would not fit.  (The old worst-case formula
+    committed the padded depth and deferred this admission forever.)"""
+    _, model, params, _ = _setup("qwen3-1.7b")
+    # s=5 pads to 16, but the real footprint is 5 + 2 = 7 -> one 16-token
+    # page; kv_pages=2 is that page plus the trash page.
+    eng = ServeEngine(model, params, EngineConfig(
+        max_batch=1, max_seq=32, decode_block=2, prefill_chunk=16,
+        kv_backend="paged", page_size=16, kv_pages=2))
+    serial = ServeEngine(model, params, EngineConfig(
+        max_batch=1, max_seq=32, decode_block=2, prefill_chunk=16,
+        kv_backend="paged", page_size=16, kv_pages=2,
+        batched_admission=False))
+    req = lambda: Request(tokens=[3, 1, 4, 1, 5], max_new_tokens=2)
+    comp = eng.generate([req()])[0]
+    assert len(comp.tokens) == 2
+    assert comp.tokens == serial.generate([req()])[0].tokens
+
+
+def test_paged_vision_chunked_admission_at_capacity():
+    """The vision prefix counts toward both bounds, once: prefix + padded
+    fills the lane exactly, and the commitment is prefix + s + max_new."""
+    arch, model, params, _ = _setup("llava-next-34b")
+    rng = np.random.RandomState(3)
+    extra = (np.asarray(rng.standard_normal((8, model.cfg.d_model)),
+                        np.float32),)
+    # lane: 8 + max(5 + 3, 16) = 24 == max_seq; commitment: 8 + 5 + 3 =
+    # 16 -> two 8-token pages (+ trash)
+    cfg = EngineConfig(max_batch=1, max_seq=24, decode_block=2,
+                       prefill_chunk=16, kv_backend="paged", page_size=8,
+                       kv_pages=3)
+    eng = ServeEngine(model, params, cfg, frontend=arch.frontend)
+    comp = eng.generate([Request(tokens=[3, 1, 4, 1, 5],
+                                 max_new_tokens=3, extra=extra)])[0]
+    assert len(comp.tokens) == 3
+    with pytest.raises(ValueError, match="max_seq"):
+        # s + max_new exceeds the padded bucket: lane needs
+        # 8 + max(13 + 4, 16) = 25 > 24
+        eng.submit(Request(tokens=list(range(1, 14)), max_new_tokens=4,
+                           extra=extra))

@@ -89,6 +89,81 @@ def test_cli_fresh_path(tmp_path, baseline):
                              "--fresh", str(badf)]) == 1
 
 
+# ------------------------------------------------------------- traffic gate
+
+@pytest.fixture
+def traffic_baseline():
+    with open(check_bench.BASELINE_TRAFFIC) as fh:
+        return json.load(fh)
+
+
+def test_traffic_baseline_passes_against_itself(traffic_baseline):
+    assert check_bench.compare_traffic(
+        traffic_baseline, copy.deepcopy(traffic_baseline), tol=0.5) == []
+
+
+def test_traffic_improvements_pass(traffic_baseline):
+    # faster AND lower-latency fresh runs never fail the gate
+    fresh = copy.deepcopy(traffic_baseline)
+    for row in fresh["rows"]:
+        row["requests_per_s"] *= 2.0
+        row["wall_speedup"] *= 2.0
+        for key in ("ttft_p50_s", "ttft_p99_s",
+                    "tpot_p50_s", "tpot_p99_s"):
+            row[key] *= 0.25
+    assert check_bench.compare_traffic(traffic_baseline, fresh,
+                                       tol=0.5) == []
+
+
+def test_traffic_throughput_regression_fails(traffic_baseline):
+    fresh = copy.deepcopy(traffic_baseline)
+    fresh["rows"][0]["requests_per_s"] *= 0.3
+    problems = check_bench.compare_traffic(traffic_baseline, fresh,
+                                           tol=0.5)
+    assert len(problems) == 1 and "requests_per_s" in problems[0]
+
+
+def test_traffic_latency_regression_fails(traffic_baseline):
+    # latency is banded from ABOVE: tripling p99 TTFT must fail even
+    # though every lower-is-worse metric is untouched
+    fresh = copy.deepcopy(traffic_baseline)
+    fresh["rows"][0]["ttft_p99_s"] *= 3.0
+    problems = check_bench.compare_traffic(traffic_baseline, fresh,
+                                           tol=0.5)
+    assert len(problems) == 1 and "ttft_p99_s" in problems[0]
+    assert "lower is better" in problems[0]
+
+
+def test_traffic_token_counts_are_exact(traffic_baseline):
+    # the seeded trace fixes every token: one off is a failure, not noise
+    fresh = copy.deepcopy(traffic_baseline)
+    fresh["rows"][0]["generated_tokens"] += 1
+    problems = check_bench.compare_traffic(traffic_baseline, fresh,
+                                           tol=0.5)
+    assert any("generated_tokens" in p for p in problems)
+
+
+def test_traffic_workload_change_flags_stale_baseline(traffic_baseline):
+    fresh = copy.deepcopy(traffic_baseline)
+    fresh["rows"][0]["rate_rps"] *= 2
+    problems = check_bench.compare_traffic(traffic_baseline, fresh,
+                                           tol=0.5)
+    assert any("regenerate the baseline" in p for p in problems)
+
+
+def test_traffic_cli_fresh_path(tmp_path, traffic_baseline):
+    good = tmp_path / "traffic.json"
+    good.write_text(json.dumps(traffic_baseline))
+    assert check_bench.main(["--only", "traffic",
+                             "--fresh-traffic", str(good)]) == 0
+    bad = copy.deepcopy(traffic_baseline)
+    bad["rows"][0]["tpot_p50_s"] *= 4.0
+    badf = tmp_path / "bad_traffic.json"
+    badf.write_text(json.dumps(bad))
+    assert check_bench.main(["--only", "traffic",
+                             "--fresh-traffic", str(badf)]) == 1
+
+
 # --------------------------------------------------------------- train gate
 
 @pytest.fixture

@@ -154,8 +154,11 @@ def test_paged_chunked_prefill_greedy_exact():
                           for p, g in zip(prompts, _BUDGETS, strict=True)])
     for comp, ref in zip(comps, refs, strict=True):
         assert comp.tokens == ref
-    # prompt lengths {5, 8, 11} collapse into buckets {8, 16}
-    assert eng.compile_stats()["prefill"] == 2
+    # prompt lengths {5, 8, 11} collapse into buckets {8, 16}: the exact
+    # bucket hits the no-refeed admit once ((1, 8)); the padded prompts
+    # hit the refeed admit at (1, 8) and (1, 16)
+    assert eng.compile_stats()["paged_admit"] == 1
+    assert eng.compile_stats()["paged_admit_refeed"] == 2
 
 
 def test_paged_sampling_seeded_deterministic_and_batch_independent():

@@ -108,8 +108,10 @@ def test_chunked_prefill_greedy_exact():
                           for p, g in zip(prompts, _BUDGETS, strict=True)])
     for comp, ref in zip(comps, refs, strict=True):
         assert comp.tokens == ref
-    # prompt lengths {5, 8, 11} collapse into buckets {8, 16}
-    assert eng.compile_stats()["prefill"] == 2
+    # prompt lengths {5, 8, 11} collapse into buckets {8, 16}: batched
+    # admission compiles once per (group size, bucket) = {(1, 8), (1, 16)}
+    assert eng.compile_stats()["prefill_batched"] == 2
+    assert eng.compile_stats()["prefill"] == 0
 
 
 # ------------------------------------------------------------------ slot reuse
