@@ -1,5 +1,6 @@
 .PHONY: test test-all test-fast bench sim serve-bench train-bench \
-	iteration-bench lint repro-lint kernels-test check-bench ci
+	iteration-bench async-bench lint repro-lint kernels-test \
+	check-bench ci
 
 # Every target preserves an existing PYTHONPATH (same idiom as
 # scripts/ci.sh) instead of clobbering it.
@@ -36,6 +37,12 @@ train-bench:
 # writes benchmarks/results/bench_iteration_time.json)
 iteration-bench:
 	$(PY_PATH) python -m benchmarks.bench_iteration_time
+
+# Async two-tier runtime vs barriered DreamDDP across the SimNet
+# scenario library (deterministic model time; must beat sync on
+# straggler + churn; writes benchmarks/results/bench_async.json)
+async-bench:
+	$(PY_PATH) python -m benchmarks.bench_async
 
 # Full SimNet scenario library: conformance sweep + sim-marked tests
 sim:

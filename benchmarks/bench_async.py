@@ -1,0 +1,120 @@
+"""Async two-tier runtime vs barriered DreamDDP on the SimNet library.
+
+For every scenario in the simulator's library the same DreamDDP plan is
+replayed twice over the same virtual cluster: once through the barriered
+:class:`repro.sim.SimExecutor` (sync), once through the asynchronous
+two-tier :class:`repro.hier.AsyncSimExecutor` (workers on their own
+clocks, staleness-aware merges, double-buffered pulls).  Both runs
+complete the same amount of work — ``periods * n_workers``
+worker-periods — so the makespans are directly comparable.  The async
+makespan is ``max(last span end, final merge time)``: trailing merges
+count, a run isn't done until its last delta lands.
+
+Every number is deterministic model time (seeded scenario -> event heap
+-> op log; no wall clock), so the committed report in
+``benchmarks/results/`` is gated near-exactly by
+``scripts/check_bench.py --only async`` — any drift means the async time
+model changed and the baseline must be regenerated deliberately.
+
+The run itself enforces the paper-level claim as an absolute bar: async
+must beat sync (speedup > 1) on the ``straggler`` and ``churn``
+scenarios, the two the DreamDDP comparison targets.
+
+``python -m benchmarks.bench_async --out ...`` writes the report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.api.registry import get_strategy
+from repro.hier import AsyncSimExecutor
+from repro.sim import (SimExecutor, available_scenarios, get_scenario,
+                       prepare_run, synthetic_profile)
+
+H = 4
+# scenarios where async must strictly beat sync (absolute bar)
+MUST_WIN = ("straggler", "churn")
+_OUT = os.path.join(os.path.dirname(__file__), "results",
+                    "bench_async.json")
+
+
+def scenario_row(name: str) -> dict:
+    """One sync-vs-async comparison over a library scenario."""
+    strategy = get_strategy("dreamddp")
+    profile = synthetic_profile()
+    sc = get_scenario(name)
+
+    cluster, plan = prepare_run(sc, strategy, H, profile)
+    sync_makespan = SimExecutor(profile, plan, cluster).run(
+        sc.periods).makespan
+
+    cluster, plan = prepare_run(sc, strategy, H, profile)
+    trace = AsyncSimExecutor(profile, plan, cluster).run(sc.periods)
+    meta = trace.meta
+    async_makespan = max(trace.makespan, meta["final_merge_time"])
+
+    hist = meta["staleness_hist"]
+    merges = meta["merges"]
+    mean_tau = sum(int(k) * v for k, v in hist.items()) / max(merges, 1)
+    return {
+        "scenario": name,
+        "workers": sc.n_workers,
+        "datacenters": sc.n_datacenters,
+        "periods": sc.periods,
+        "H": H,
+        "merge_rule": meta["merge_rule"],
+        "pushes_per_merge": meta["pushes_per_merge"],
+        "sync_makespan": sync_makespan,
+        "async_makespan": async_makespan,
+        "speedup": sync_makespan / async_makespan,
+        "merges": merges,
+        "max_staleness": max((int(k) for k in hist), default=0),
+        "mean_staleness": mean_tau,
+        "staleness_hist": hist,
+    }
+
+
+def run(csv: bool = True) -> list[dict]:
+    rows = [scenario_row(name) for name in available_scenarios()]
+    if csv:
+        keys = ("scenario", "workers", "periods", "sync_makespan",
+                "async_makespan", "speedup", "merges", "max_staleness",
+                "mean_staleness")
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=_OUT,
+                    help="write the report as JSON (the committed copy "
+                         "is the check_bench baseline)")
+    args = ap.parse_args(argv)
+    rows = run()
+    report = {"H": H, "must_win": list(MUST_WIN), "rows": rows}
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+    rc = 0
+    by_name = {r["scenario"]: r for r in rows}
+    for name in MUST_WIN:
+        row = by_name.get(name)
+        if row is None:
+            print(f"FAIL: scenario {name!r} missing from the library")
+            rc = 1
+        elif row["speedup"] <= 1.0:
+            print(f"FAIL: async does not beat sync on {name!r} "
+                  f"(speedup {row['speedup']:.3f}x)")
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

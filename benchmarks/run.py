@@ -83,6 +83,12 @@ def main(argv=None) -> int:
         if per["dreamddp"] > per["flsgd"] * 1.05 + 1e-12:
             failures.append(("simnet", (name, per)))
 
+    _section("Async two-tier runtime vs barriered DreamDDP (SimNet)")
+    from . import bench_async
+    for r in bench_async.run():
+        if r["scenario"] in bench_async.MUST_WIN and r["speedup"] <= 1.0:
+            failures.append(("async", r))
+
     _section("Fig 16: search complexity")
     for r in bench_search_complexity.run():
         if r["dd_nodes"] > r["bf_solutions"]:

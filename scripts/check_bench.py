@@ -17,7 +17,12 @@ Gates four reports against the committed baseline JSONs in
   through the analytic event-timeline model; every number is
   deterministic model time, so the whole table is compared near-exactly
   — any drift means the profiler/scheduler/time model changed and the
-  baseline must be regenerated deliberately).
+  baseline must be regenerated deliberately);
+* ``async`` — ``benchmarks.bench_async`` (async two-tier runtime vs
+  barriered DreamDDP over the SimNet scenario library; deterministic
+  model time like ``iteration``, so makespans/speedups/staleness are
+  near-exact and the staleness histogram is identity — any drift means
+  the async executor's time model changed).
 
 Two classes of metric:
 
@@ -62,6 +67,7 @@ BASELINE = os.path.join(_RESULTS, "bench_serve.json")
 BASELINE_TRAFFIC = os.path.join(_RESULTS, "bench_traffic.json")
 BASELINE_TRAIN = os.path.join(_RESULTS, "bench_train_loop.json")
 BASELINE_ITER = os.path.join(_RESULTS, "bench_iteration_time.json")
+BASELINE_ASYNC = os.path.join(_RESULTS, "bench_async.json")
 
 # workload identity: a mismatch means stale baseline, not a regression
 IDENTITY = ("n_requests", "short_len", "long_len", "gen", "max_batch",
@@ -98,6 +104,15 @@ TRAIN_BANDED = ("speedup", "compiled_speedup", "best_speedup")
 ITER_IDENTITY = ("model", "workers")
 ITER_EXACT = ("ssgd", "ascwfbp", "flsgd", "plsgd-enp", "dreamddp",
               "S1_vs_ascwfbp", "S2_vs_flsgd")
+
+# async vs sync: pure model time from seeded scenarios — makespans and
+# staleness stats near-exact; the histogram (and discrete counters)
+# must match the baseline verbatim
+ASYNC_IDENTITY = ("scenario", "workers", "datacenters", "periods", "H",
+                  "merge_rule", "pushes_per_merge", "merges",
+                  "max_staleness", "staleness_hist")
+ASYNC_EXACT = ("sync_makespan", "async_makespan", "speedup",
+               "mean_staleness")
 
 EXACT_TOL = 0.005
 
@@ -249,6 +264,24 @@ def compare_iteration(baseline: dict, fresh: dict, *,
     return problems
 
 
+def compare_async(baseline: dict, fresh: dict, *,
+                  exact_tol: float = EXACT_TOL) -> list[str]:
+    """The async-vs-sync report (``bench_async.json``): deterministic
+    model time only — everything near-exact, histograms verbatim."""
+    problems: list[str] = []
+    if baseline.get("H") != fresh.get("H"):
+        _fail(problems, f"async.H: {baseline.get('H')} -> "
+                        f"{fresh.get('H')} — regenerate the baseline")
+    for b, f in _pair_rows(problems, "async_rows",
+                           baseline.get("rows", []),
+                           fresh.get("rows", [])):
+        _check_section(
+            problems, f"async_rows[{b.get('scenario')}]", b, f,
+            exact=ASYNC_EXACT, exact_nested=(), banded=(),
+            tol=0.0, exact_tol=exact_tol, identity=ASYNC_IDENTITY)
+    return problems
+
+
 def _load_baseline(path: str, make_cmd: str) -> dict | None:
     if not os.path.exists(path):
         print(f"no baseline at {path}; run `{make_cmd}` and commit the "
@@ -281,6 +314,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline-train", default=BASELINE_TRAIN)
     ap.add_argument("--baseline-iteration", default=BASELINE_ITER)
     ap.add_argument("--baseline-traffic", default=BASELINE_TRAFFIC)
+    ap.add_argument("--baseline-async", default=BASELINE_ASYNC)
     ap.add_argument("--fresh", default=None,
                     help="existing fresh serve report (skip the bench)")
     ap.add_argument("--fresh-traffic", default=None,
@@ -289,7 +323,9 @@ def main(argv=None) -> int:
                     help="existing fresh train-loop report")
     ap.add_argument("--fresh-iteration", default=None,
                     help="existing fresh iteration-time report")
-    ap.add_argument("--only", default="serve,traffic,train,iteration",
+    ap.add_argument("--fresh-async", default=None,
+                    help="existing fresh async-vs-sync report")
+    ap.add_argument("--only", default="serve,traffic,train,iteration,async",
                     help="comma list of gates to run")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="tolerance band for wall-clock metrics")
@@ -297,7 +333,7 @@ def main(argv=None) -> int:
                     help="band for deterministic metrics")
     args = ap.parse_args(argv)
     gates = {g.strip() for g in args.only.split(",") if g.strip()}
-    unknown = gates - {"serve", "traffic", "train", "iteration"}
+    unknown = gates - {"serve", "traffic", "train", "iteration", "async"}
     if unknown:
         ap.error(f"unknown gates {sorted(unknown)}")
 
@@ -353,6 +389,18 @@ def main(argv=None) -> int:
             return rc
         problems += compare_iteration(baseline, fresh,
                                       exact_tol=args.exact_tol)
+
+    if "async" in gates:
+        baseline = _load_baseline(args.baseline_async, "make async-bench")
+        if baseline is None:
+            return 1
+        from benchmarks import bench_async
+        fresh, rc = _fresh_report(args.fresh_async, bench_async.main, [],
+                                  "bench_async")
+        if rc != 0:
+            return rc
+        problems += compare_async(baseline, fresh,
+                                  exact_tol=args.exact_tol)
 
     if problems:
         print(f"check_bench: {len(problems)} regression(s) vs committed "

@@ -82,6 +82,23 @@ class JobConfig:
     # per period (maximum fusion, ~1-2 ULP re-rounding)
     fused_period: bool = True
     period_exec: str = "pipeline"
+    # depth-k data staging for the fused runner (runtime/pipeline.py):
+    # batches are bitwise-identical across depths/modes; the knobs only
+    # move WHEN the staging work happens
+    prefetch_depth: int = 1
+    prefetch_background: bool = False
+    # asynchronous two-tier execution (hier/DESIGN.md): workers run
+    # H-step periods on their own clocks and push layer-wise deltas to a
+    # server tier that merges them with staleness-aware momentum — no
+    # period-boundary barrier.  Also switched on by strategies that set
+    # ``async_runtime`` (e.g. ``algo="hier-async"``).
+    async_mode: bool = False
+    merge_rule: str = "halos"          # "halos" | "delayed-nesterov"
+    staleness_beta: float = 0.9
+    merge_lr: float | None = None      # None -> 1/workers (worker mean)
+    merge_momentum: float = 0.9
+    max_staleness: int = 8
+    pushes_per_merge: int = 1
 
     def replace(self, **kw) -> "JobConfig":
         return dataclasses.replace(self, **kw)
@@ -165,6 +182,41 @@ class Session:
             base, policy=self.strategy.sync_policy(base), compress=None,
             outer=False)
 
+    # ----------------------------------------------------------- async parts
+    @property
+    def use_async(self) -> bool:
+        """Whether training runs on the async two-tier runtime."""
+        return bool(self.cfg.async_mode
+                    or getattr(self.strategy, "async_runtime", False))
+
+    @property
+    def merge_config(self):
+        from ..hier import MergeConfig
+        cfg = self.cfg
+        return MergeConfig(rule=cfg.merge_rule, lr=cfg.merge_lr,
+                           momentum=cfg.merge_momentum,
+                           staleness_beta=cfg.staleness_beta,
+                           max_staleness=cfg.max_staleness)
+
+    @property
+    def async_config(self):
+        from ..hier import AsyncConfig
+        return AsyncConfig(pushes_per_merge=self.cfg.pushes_per_merge,
+                           merge=self.merge_config)
+
+    def _static_scenario(self):
+        """The implicit static single-DC scenario a plain async ``fit``
+        runs against (the JobConfig link, no events)."""
+        from ..sim.network import LinkSpec
+        from ..sim.scenarios import Scenario
+        cfg = self.cfg
+        return Scenario(
+            name="static", description="static cluster from JobConfig",
+            n_workers=cfg.workers, n_datacenters=1,
+            intra=LinkSpec(bandwidth=cfg.bandwidth, latency=cfg.latency,
+                           jitter=0.0),
+            inter=None, drift={}, events=(), periods=1, seed=cfg.seed)
+
     @property
     def state(self) -> TrainState:
         self._ensure_built()
@@ -203,12 +255,28 @@ class Session:
         self._state = init_train_state(self.model, self._opt,
                                        jax.random.PRNGKey(cfg.seed),
                                        cfg.workers, cfg=scfg)
+        if self.use_async:
+            from ..hier import AsyncHierRunner, AsyncRunnerConfig
+            self._runner = AsyncHierRunner(
+                self.model, self._opt, self.strategy, self._data,
+                profile=self.profile(), scenario=self._static_scenario(),
+                H=cfg.period, step_cfg=scfg,
+                run_cfg=AsyncRunnerConfig(
+                    async_cfg=self.async_config,
+                    ckpt_every_merges=(cfg.ckpt_every
+                                       if self._ckpt is not None else 0),
+                    fill_mode=cfg.fill_mode),
+                ckpt=self._ckpt, seed=cfg.seed)
+            return
         self._runner = Runner(self.model, self._opt, self.plan, self._data,
                               ckpt=self._ckpt, step_cfg=scfg,
                               run_cfg=RunnerConfig(
                                   ckpt_every=cfg.ckpt_every,
                                   fused_period=cfg.fused_period,
-                                  period_exec=cfg.period_exec))
+                                  period_exec=cfg.period_exec,
+                                  prefetch_depth=cfg.prefetch_depth,
+                                  prefetch_background=(
+                                      cfg.prefetch_background)))
 
     def fit(self, steps: int) -> "Session":
         """Train for ``steps`` iterations (resumable; history accumulates).
@@ -219,8 +287,27 @@ class Session:
         falling back to the per-step oracle for partial periods (a
         ``replan()`` or restore landing mid-period).  Set
         ``fused_period=False`` to force the per-step path throughout.
+
+        Under the async runtime (``async_mode`` or an ``async_runtime``
+        strategy like ``hier-async``) ``steps`` must be a whole number
+        of periods; workers run them on their own virtual clocks and the
+        trained artifact is the global server model, broadcast back into
+        the worker-stacked ``state`` view for ``serve()``.  The async op
+        log is a deterministic function of the total period count, so a
+        session runs exactly one async timeline — call ``fit`` once.
         """
         self._ensure_built()
+        if self.use_async:
+            H = self.cfg.period
+            if steps % H:
+                raise ValueError(
+                    f"async fit advances whole periods: steps={steps} is "
+                    f"not a multiple of H={H}")
+            self._runner.run((self._step + steps) // H)
+            self._step += steps
+            self._state = self._state._replace(
+                params=self._runner.stacked_params(self.cfg.workers))
+            return self
         self._state = self._runner.run(self._state, steps,
                                        start_step=self._step)
         self._step += steps
@@ -250,6 +337,12 @@ class Session:
                          ("algo", algo), ("fill_mode", fill_mode)):
             if val is not None:
                 updates[key] = val
+        if self._runner is not None and self.use_async:
+            raise ValueError(
+                "replan() is not supported on a running async session: "
+                "the op-log replay pins one timeline.  Express membership "
+                "and bandwidth changes as scenario events instead "
+                "(WorkerJoin/WorkerLeave/BandwidthDrift).")
         old_workers = self.cfg.workers
         old_strategy = self.strategy
         workers_changed = workers is not None and workers != old_workers
@@ -299,7 +392,8 @@ class Session:
     # ----------------------------------------------------------- simulation
     def simulate(self, scenario, *, periods: int | None = None,
                  replan: bool = True, n_channels: int = 1,
-                 profile: LayerProfile | None = None):
+                 profile: LayerProfile | None = None,
+                 mode: str | None = None):
         """Replay this job's schedule through a virtual geo-cluster.
 
         ``scenario`` is a :class:`repro.sim.Scenario` or a library name
@@ -310,6 +404,12 @@ class Session:
         default) every schedule-relevant event — bandwidth drift, link
         degradation, elastic join/leave — triggers a re-solve at the
         next period boundary, exactly like a live ``.replan()`` call.
+
+        ``mode`` picks the execution model: ``"sync"`` replays the
+        barriered period executor, ``"async"`` the two-tier
+        :class:`repro.hier.AsyncSimExecutor` (per-worker virtual clocks,
+        staleness-aware merges; ``replan``/``n_channels`` don't apply).
+        Default follows the session: async when :attr:`use_async`.
 
         ``profile`` substitutes an external :class:`LayerProfile` for the
         model-derived one (benchmarks replay paper models this way
@@ -322,6 +422,21 @@ class Session:
         if isinstance(scenario, str):
             scenario = get_scenario(scenario)
         base = self.profile() if profile is None else profile
+        if mode is None:
+            mode = "async" if self.use_async else "sync"
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        if mode == "async":
+            from ..hier import AsyncSimExecutor
+            cluster, plan = prepare_run(scenario, self.strategy,
+                                        self.cfg.period, base,
+                                        fill_mode=self.cfg.fill_mode)
+            ex = AsyncSimExecutor(base, plan, cluster,
+                                  cfg=self.async_config)
+            trace = ex.run(periods if periods is not None
+                           else scenario.periods)
+            return SimReport(scenario=scenario.name, trace=trace,
+                             plans=[(0, plan)])
         cluster, plan = prepare_run(scenario, self.strategy,
                                     self.cfg.period, base,
                                     fill_mode=self.cfg.fill_mode)

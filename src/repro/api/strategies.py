@@ -41,7 +41,7 @@ from ..core.sync_policies import Int8EFSync, SyncPolicy, resolve_policy
 from .registry import register_strategy
 
 __all__ = ["SyncStrategy", "GradientSync", "FLSGD", "PLSGDEqualNumber",
-           "DreamDDP", "DreamDDPInt8", "HierarchicalTwoTier"]
+           "DreamDDP", "DreamDDPInt8", "HierarchicalTwoTier", "HierAsync"]
 
 
 class SyncStrategy:
@@ -140,6 +140,24 @@ class DreamDDPInt8(DreamDDP):
 
     def sync_policy(self, cfg):
         return Int8EFSync()
+
+
+@register_strategy("hier-async")
+@dataclass(frozen=True)
+class HierAsync(DreamDDP):
+    """DreamDDP schedule on the async two-tier runtime (no barriers).
+
+    The plan's per-phase unit groups become the push granularity of
+    :class:`repro.hier.AsyncHierRunner`: workers run whole periods
+    locally and stream layer-wise deltas to the server tier, which
+    merges them with staleness-aware momentum.  ``async_runtime`` makes
+    :class:`~repro.api.session.Session` pick the async runner and
+    :meth:`~repro.api.session.Session.simulate` default to
+    ``mode="async"``.
+    """
+
+    name: str = "hier-async"
+    async_runtime: bool = True
 
 
 @register_strategy("hier-2tier")

@@ -132,6 +132,23 @@ class CheckpointManager:
         with open(ptr) as f:
             return int(f.read().strip().split("_")[1])
 
+    def peek_meta(self, step: int | None = None) -> dict:
+        """Read a checkpoint's manifest ``meta`` without loading arrays.
+
+        The async hierarchical runner stores its membership/cursor state
+        here and needs it *before* it can build the restore template
+        (which worker states and in-flight deltas exist is itself part
+        of the checkpoint).
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["meta"]
+
     def restore(self, template: PyTree, *, step: int | None = None
                 ) -> tuple[int, PyTree, dict]:
         """Load into ``template``'s structure (shapes may differ in the

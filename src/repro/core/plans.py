@@ -29,7 +29,7 @@ from .profiler import LayerProfile
 from .schedule import ScheduleResult
 
 __all__ = ["SyncPlan", "build_plan", "plan_from_partition", "local_plan",
-           "ALGOS", "GRADIENTS", "PARAMETERS"]
+           "local_period_plan", "ALGOS", "GRADIENTS", "PARAMETERS"]
 
 #: The seed algorithm names (kept for backward compatibility; the strategy
 #: registry in :mod:`repro.api` is the source of truth and hosts more).
@@ -77,7 +77,11 @@ class SyncPlan:
         for units in self.phase_units:
             seen.update(units)
         missing = set(range(self.n_units)) - seen
-        if missing and self.comm == PARAMETERS:
+        if missing and self.comm == PARAMETERS and self.algo != "local":
+            # "local" plans opt out of the in-step sync path entirely —
+            # the async hierarchical runtime reconciles workers through
+            # the server tier instead (repro.hier), so Lemma 4's bound
+            # is enforced there (staleness clamp), not here.
             raise ValueError(
                 f"plan never synchronizes units {sorted(missing)}; every "
                 f"layer must sync at least once per period (Lemma 4)")
@@ -210,6 +214,22 @@ def local_plan(n_units: int) -> SyncPlan:
     return SyncPlan(algo="local", comm=PARAMETERS, H=2, n_units=n_units,
                     phase_units=((), tuple(range(n_units))),
                     fill_units=((), ()))
+
+
+def local_period_plan(n_units: int, H: int) -> SyncPlan:
+    """An H-phase plan that performs no in-step synchronization at all.
+
+    The async hierarchical runtime (:mod:`repro.hier`) executes whole
+    periods of pure local steps per worker — reconciliation happens
+    through the local/global server tier between periods, not inside the
+    step — so every phase's unit set is empty.  ``phase_segments()``
+    collapses the H identical phases into one segment, so
+    :func:`~repro.runtime.step.make_period_step` compiles this to a
+    single ``lax.scan`` over the period batch.
+    """
+    return SyncPlan(algo="local", comm=PARAMETERS, H=H, n_units=n_units,
+                    phase_units=tuple(() for _ in range(H)),
+                    fill_units=tuple(() for _ in range(H)))
 
 
 def build_plan(algo: str, profile: LayerProfile, H: int, *,

@@ -34,9 +34,56 @@ from .outer_opt import OuterConfig, OuterState, outer_init, outer_sync_units
 from .partial_sync import UnitLayout, contiguous_ranges, sync_units
 
 __all__ = ["SyncPolicy", "MeanSync", "Int8EFSync", "OuterOptSync",
-           "resolve_policy"]
+           "resolve_policy", "tree_unit_map"]
 
 PyTree = Any
+
+
+def tree_unit_map(fn, trees: Sequence[PyTree], unit_ids: Sequence[int],
+                  layout: UnitLayout, *, axis: int = 0) -> tuple:
+    """Apply ``fn`` to each unit-group slice of N parallel param-like trees.
+
+    ``fn(*slices)`` receives one array slice per tree and returns the
+    same number of updated slices.  Plain (unstacked) groups pass whole
+    leaves; layer-stacked groups pass contiguous ``[lo:hi)`` slices along
+    ``axis`` (0 for unstacked trees, 1 for worker-stacked trees).  Leaves
+    outside ``unit_ids`` are returned untouched.
+
+    This is the generic form of the slicing idiom used by
+    :func:`_sync_units_ef` / :func:`~repro.core.outer_opt.outer_sync_units`;
+    the hierarchical server tier (:mod:`repro.hier.merge`) uses it to run
+    staleness-aware merges on exactly the per-layer sync units the
+    scheduler emits.
+    """
+    n = len(trees)
+    grouped = layout.by_group(unit_ids)
+    outs = [dict(t) for t in trees]
+    isn = lambda t: isinstance(t, tuple) and len(t) == n
+
+    def split(res, k):
+        return jax.tree.map(lambda t: t[k], res, is_leaf=isn)
+
+    for group in grouped:
+        idxs = grouped[group]
+        subs = [t[group] for t in trees]
+        if idxs == [None]:
+            res = jax.tree.map(lambda *xs: tuple(fn(*xs)), *subs)
+        else:
+            ranges = contiguous_ranges([i for i in idxs if i is not None])
+
+            def sliced(*xs):
+                xs = list(xs)
+                for lo, hi in ranges:
+                    sl = slice(lo, hi)
+                    ix = (slice(None),) * axis + (sl,)
+                    new = fn(*(x[ix] for x in xs))
+                    xs = [x.at[ix].set(v) for x, v in zip(xs, new)]
+                return tuple(xs)
+
+            res = jax.tree.map(sliced, *subs)
+        for k in range(n):
+            outs[k][group] = split(res, k)
+    return tuple(outs)
 
 
 @dataclass(frozen=True)

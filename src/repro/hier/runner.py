@@ -1,0 +1,347 @@
+"""AsyncHierRunner — real training driven by the deterministic op log.
+
+The :class:`~repro.hier.executor.AsyncSimExecutor` decides *when* things
+happen (on seeded virtual clocks); this runner executes *what* happens,
+in exactly that order:
+
+* ``PullOp``    — worker downloads the global float32 model;
+* ``PeriodOp``  — worker runs one fused H-step local period (the
+  period-fused executor from :mod:`repro.runtime.step`, compiled once
+  for a ``[H, 1, ...]`` single-worker batch via
+  :func:`~repro.core.plans.local_period_plan` and reused by every
+  worker) and computes its delta against the pulled base;
+* ``PushOp``    — the per-phase layer-group delta lands at its
+  datacenter's :class:`~repro.hier.servers.LocalServer`;
+* ``MergeOp``   — that server's accumulated batch merges into the
+  :class:`~repro.hier.servers.GlobalServer` with staleness-aware weight;
+* ``JoinOp`` / ``LeaveOp`` — elastic membership: joiners bootstrap from
+  the current global model with fresh optimizer state, leavers drop
+  their local state (their already-pushed deltas still merge).
+
+Every quantity that orders or scales an update (versions, staleness,
+contributor sets) is carried *in* the op, and the runner asserts its own
+server state agrees op-by-op — so the executor's timing machine and the
+training math can never silently drift apart.  Checkpoints land only at
+merge boundaries and store the full reachable state (worker states,
+server tensors, in-flight deltas, membership, op cursor); a restore
+regenerates the op log from the same seed and fast-forwards to the
+cursor, which is why a resumed run replays to an identical trace and
+bitwise-identical parameters (``DESIGN.md``).
+
+Times in the history are *virtual* (simulated seconds) — the runner
+never reads a wall clock, keeping ``repro.hier`` inside the
+SIM-DETERMINISM lint scope.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.plans import SyncPlan, local_period_plan
+from ..core.sync_policies import resolve_policy
+from ..lint import hot_path
+from ..runtime.step import StepConfig, init_train_state, make_period_step
+from ..sim.executor import prepare_run
+from .executor import (AsyncConfig, AsyncSimExecutor, JoinOp, LeaveOp,
+                       MergeOp, PeriodOp, PullOp, PushOp)
+from .servers import GlobalServer, LocalServer
+
+__all__ = ["AsyncHierRunner", "AsyncRunnerConfig"]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AsyncRunnerConfig:
+    async_cfg: AsyncConfig = field(default_factory=AsyncConfig)
+    ckpt_every_merges: int = 0        # 0 = no periodic checkpoints
+    fill_mode: str = "exact"
+
+
+class AsyncHierRunner:
+    """Execute async hierarchical training over a scenario's timeline."""
+
+    def __init__(self, model, optimizer, strategy, data, *, profile,
+                 scenario, step_cfg: StepConfig = StepConfig(),
+                 run_cfg: AsyncRunnerConfig = AsyncRunnerConfig(),
+                 H: int = 4, ckpt=None, seed: int = 0):
+        policy = resolve_policy(step_cfg)
+        if policy.name != "mean":
+            raise ValueError(
+                f"async runtime requires the plain mean sync policy "
+                f"(deltas are merged server-side); got {policy.name!r}")
+        self.model = model
+        self.optimizer = optimizer
+        self.strategy = strategy
+        self.data = data
+        self.profile = profile
+        self.scenario = scenario
+        self.step_cfg = step_cfg
+        self.run_cfg = run_cfg
+        self.ckpt = ckpt
+        self.seed = seed
+        self.layout = model.unit_layout()
+
+        cluster, plan = prepare_run(scenario, strategy, H, profile,
+                                    fill_mode=run_cfg.fill_mode)
+        self.plan: SyncPlan = plan
+        self.H = plan.H
+        self._n_workers0 = cluster.n_active
+        self._local_plan = local_period_plan(plan.n_units, plan.H)
+        self._period_fn = make_period_step(
+            model, optimizer, self._local_plan, cfg=step_cfg, donate=True)
+        self._init_key = jax.random.PRNGKey(seed)
+        self._template = init_train_state(model, optimizer, self._init_key,
+                                          1, cfg=step_cfg)
+        self._pull_fn = jax.jit(lambda g, p: jax.tree.map(
+            lambda gl, pl: gl.astype(pl.dtype)[None], g, p))
+        self._delta_fn = jax.jit(lambda p, g: jax.tree.map(
+            lambda pl, gl: pl[0].astype(jnp.float32) - gl, p, g))
+
+        self.states: dict[int, Any] = {
+            w: jax.tree.map(jnp.copy, self._template)
+            for w in sorted(cluster.active)}
+        self.server = GlobalServer(
+            jax.tree.map(lambda x: x[0], self._template.params),
+            self.layout, run_cfg.async_cfg.merge,
+            n_workers=self._n_workers0)
+        self.locals: dict[int, LocalServer] = {}
+        self._bases: dict[int, PyTree] = {}
+        self._deltas: dict[tuple[int, int], PyTree] = {}
+        self._refs: dict[tuple[int, int], int] = {}
+        self.cursor = 0
+        self.total_periods = 0
+        self.history: list[dict] = []
+        self.trace = None
+        self._pending_metrics: list[tuple] = []
+
+    # ------------------------------------------------------------- schedule
+    def _schedule(self, periods: int):
+        """Regenerate the full deterministic timeline for ``periods``."""
+        cluster = self.scenario.build(self.H)
+        ex = AsyncSimExecutor(self.profile, self.plan, cluster,
+                              cfg=self.run_cfg.async_cfg)
+        trace = ex.run(periods)
+        return ex.ops, trace
+
+    # ------------------------------------------------------------------ run
+    def run(self, periods: int):
+        """Execute the timeline for ``periods`` nominal periods per worker.
+
+        ``periods`` is absolute, not incremental: the op log is a
+        deterministic function of (scenario seed, total periods), and the
+        work-conserving quota means a *longer* run is not a superset of a
+        shorter one — so a runner executes exactly one timeline.  Calling
+        ``run`` again with the same total is how a restored runner
+        resumes: the already-executed prefix is skipped via the cursor.
+        """
+        if self.total_periods and periods != self.total_periods:
+            raise ValueError(
+                f"this runner's timeline was scheduled for "
+                f"{self.total_periods} periods; op-log replay cannot "
+                f"extend it to {periods} (build a new runner)")
+        self.total_periods = periods
+        ops, trace = self._schedule(self.total_periods)
+        if self.cursor > len(ops):
+            raise RuntimeError(
+                f"op cursor {self.cursor} beyond regenerated log "
+                f"({len(ops)} ops) — scenario/seed mismatch on resume?")
+        for op in ops[self.cursor:]:
+            if isinstance(op, MergeOp):
+                for key in op.contributors:
+                    k = (key[0], key[1])
+                    self._refs[k] = self._refs.get(k, 0) + 1
+        self._run_ops(ops)
+        self.trace = trace
+        self._drain_metrics()
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return trace
+
+    @hot_path
+    def _run_ops(self, ops) -> None:
+        every = self.run_cfg.ckpt_every_merges
+        for i in range(self.cursor, len(ops)):
+            op = ops[i]
+            self._apply_op(op)
+            self.cursor = i + 1
+            if (self.ckpt is not None and every > 0
+                    and isinstance(op, MergeOp)
+                    and op.version % every == 0):
+                self.save()
+
+    @hot_path
+    def _apply_op(self, op) -> None:
+        if isinstance(op, PullOp):
+            if self.server.version != op.version:
+                raise AssertionError(
+                    f"pull at version {op.version} but server is at "
+                    f"{self.server.version}")
+            st = self.states[op.worker]
+            self._bases[op.worker] = self.server.params
+            self.states[op.worker] = st._replace(
+                params=self._pull_fn(self.server.params, st.params))
+        elif isinstance(op, PeriodOp):
+            batch = self._period_batch(op.worker, op.iter0)
+            st, metrics = self._period_fn(self.states[op.worker], batch)
+            self.states[op.worker] = st
+            delta = self._delta_fn(st.params, self._bases.pop(op.worker))
+            key = (op.worker, op.period)
+            if self._refs.get(key, 0) > 0:
+                self._deltas[key] = delta
+            self._pending_metrics.append(
+                (op.worker, op.period, op.iter0, op.t0, op.t1, metrics))
+        elif isinstance(op, PushOp):
+            srv = self.locals.setdefault(op.dc, LocalServer(op.dc))
+            srv.push(self._deltas[(op.worker, op.period)], op.units,
+                     op.base_version, worker=op.worker, period=op.period,
+                     phase=op.phase)
+        elif isinstance(op, MergeOp):
+            entries = self.locals[op.dc].take(op.contributors)
+            delta, units, base = LocalServer.merged_delta(entries)
+            if units != op.units:
+                raise AssertionError(
+                    f"merge units {units} != executor's {op.units}")
+            tau = self.server.merge(delta, base, units)
+            if tau != op.staleness or self.server.version != op.version:
+                raise AssertionError(
+                    f"merge (version {self.server.version}, staleness "
+                    f"{tau}) disagrees with executor op {op}")
+            for key in op.contributors:
+                k = (key[0], key[1])
+                self._refs[k] -= 1
+                if self._refs[k] == 0:
+                    del self._refs[k]
+                    self._deltas.pop(k, None)
+        elif isinstance(op, JoinOp):
+            st = jax.tree.map(jnp.copy, self._template)
+            self.states[op.worker] = st._replace(
+                params=self._pull_fn(self.server.params, st.params))
+        elif isinstance(op, LeaveOp):
+            self.states.pop(op.worker, None)
+            self._bases.pop(op.worker, None)
+        else:
+            raise TypeError(f"unknown op {op!r}")
+
+    @hot_path
+    def _period_batch(self, worker: int, iter0: int) -> PyTree:
+        w = worker % self.data.n_workers
+        per_step = [jax.tree.map(lambda x: x[w][None],
+                                 self.data.batch(iter0 + h))
+                    for h in range(self.H)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+
+    @hot_path
+    def _drain_metrics(self) -> None:
+        """One batched host sync for everything accumulated this run."""
+        if not self._pending_metrics:
+            return
+        host = jax.device_get([m[-1] for m in self._pending_metrics])
+        for (w, p, it0, t0, t1, _), metrics in zip(self._pending_metrics,
+                                                   host):
+            loss = metrics.get("loss")
+            self.history.append({
+                "worker": w, "period": p, "step": it0,
+                "t_start": t0, "t_end": t1, "time": t1 - t0,
+                "loss": float(loss.mean()) if loss is not None else None,
+            })
+        self._pending_metrics = []
+
+    # ------------------------------------------------------------ stacking
+    def stacked_params(self, n_workers: int | None = None) -> PyTree:
+        """Global model broadcast to a worker-stacked ``[W, ...]`` view
+        (what ``Session.state`` / ``serve()`` consume)."""
+        w = self._n_workers0 if n_workers is None else n_workers
+        dtype_src = self._template.params
+        return jax.tree.map(
+            lambda g, p: jnp.broadcast_to(g.astype(p.dtype),
+                                          (w,) + g.shape),
+            self.server.params, dtype_src)
+
+    # ---------------------------------------------------------- checkpoint
+    def save(self) -> None:
+        """Checkpoint at the current (merge-boundary) op cursor."""
+        if self.ckpt is None:
+            raise ValueError("runner built without a CheckpointManager")
+        self._drain_metrics()
+        payload = {
+            "workers": {str(w): self.states[w]
+                        for w in sorted(self.states)},
+            "server": self.server.state(),
+            "pending": {f"{w}:{p}": self._deltas[(w, p)]
+                        for (w, p) in sorted(self._deltas)},
+            "bases": {str(w): self._bases[w]
+                      for w in sorted(self._bases)},
+        }
+        meta = {
+            "mode": "hier-async",
+            "cursor": self.cursor,
+            "total_periods": self.total_periods,
+            "workers": sorted(self.states),
+            "pending": sorted(f"{w}:{p}" for (w, p) in self._deltas),
+            "bases": sorted(self._bases),
+            "refs": {f"{w}:{p}": n
+                     for (w, p), n in sorted(self._refs.items())},
+            "locals": {str(dc): self.locals[dc].describe()
+                       for dc in sorted(self.locals)},
+            "server": self.server.meta(),
+            "plan_fingerprint": self.plan.fingerprint(),
+            "seed": self.seed,
+        }
+        self.ckpt.save(self.server.version, payload, meta=meta)
+
+    def restore(self, step: int | None = None) -> int:
+        """Resume from a checkpoint; returns the restored global version.
+
+        The op log is regenerated from the scenario seed on the next
+        :meth:`run`, so the continuation replays the exact timeline the
+        interrupted run would have produced.
+        """
+        if self.ckpt is None:
+            raise ValueError("runner built without a CheckpointManager")
+        meta = self.ckpt.peek_meta(step)
+        if meta.get("plan_fingerprint") != self.plan.fingerprint():
+            raise ValueError("checkpoint was written under a different "
+                             "plan; cannot replay its op log")
+        zero_delta = jax.tree.map(
+            lambda x: jnp.zeros(x.shape[1:], jnp.float32),
+            self._template.params)
+        template = {
+            "workers": {str(w): jax.tree.map(jnp.copy, self._template)
+                        for w in meta["workers"]},
+            "server": self.server.state(),
+            "pending": {k: zero_delta for k in meta["pending"]},
+            "bases": {str(w): zero_delta for w in meta["bases"]},
+        }
+        _, payload, meta = self.ckpt.restore(template, step=step)
+        self.states = {int(w): st
+                       for w, st in payload["workers"].items()}
+        self.server.load(payload["server"], meta["server"])
+        self._deltas = {}
+        for k, delta in payload["pending"].items():
+            w, p = k.split(":")
+            self._deltas[(int(w), int(p))] = jax.tree.map(
+                jnp.asarray, delta)
+        self._refs = {}
+        for k, n in meta["refs"].items():
+            w, p = k.split(":")
+            self._refs[(int(w), int(p))] = int(n)
+        self.locals = {}
+        for dc, entries in meta["locals"].items():
+            srv = LocalServer(int(dc))
+            for e in entries:
+                srv.push(self._deltas[(e["worker"], e["period"])],
+                         tuple(e["units"]), e["base_version"],
+                         worker=e["worker"], period=e["period"],
+                         phase=e["phase"])
+            self.locals[int(dc)] = srv
+        self._bases = {int(w): jax.tree.map(jnp.asarray, b)
+                       for w, b in payload["bases"].items()}
+        self._pending_metrics = []
+        self.cursor = int(meta["cursor"])
+        self.total_periods = int(meta["total_periods"])
+        return self.server.version

@@ -1,0 +1,224 @@
+"""LocalServer / GlobalServer — the two-tier async state machine.
+
+The :class:`GlobalServer` holds the float32 reference model (unstacked:
+no worker axis, layer-stacked groups keep their layer axis at position
+0) plus the merge rule's auxiliary state (momentum; delta buffer for
+delayed-Nesterov) and a monotonically increasing ``version`` counter —
+one increment per merge.  Staleness of a delta is
+``version_at_merge - version_at_pull``.
+
+A :class:`LocalServer` fronts one datacenter: workers push per-phase
+layer-group deltas to it without blocking, it accumulates them, and
+every ``pushes_per_merge`` arrivals it forwards the batch (averaged at
+merge time) upstream.  With the default of 1 it is a pass-through tier;
+with more it trades staleness for fewer inter-DC transfers.
+
+Both tiers are driven strictly by the deterministic op log of
+:class:`repro.hier.executor.AsyncSimExecutor` — they never consult a
+wall clock or ambient randomness, which is what makes checkpoint/restart
+replay to an identical trace (see ``DESIGN.md``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.partial_sync import UnitLayout
+from ..core.sync_policies import tree_unit_map
+from ..lint import hot_path
+from .merge import MergeConfig, staleness_scale
+
+__all__ = ["GlobalServer", "LocalServer", "PushEntry"]
+
+PyTree = Any
+
+
+class GlobalServer:
+    """Global tier: staleness-aware merges into the reference model."""
+
+    def __init__(self, params: PyTree, layout: UnitLayout,
+                 cfg: MergeConfig, *, n_workers: int):
+        self.cfg = cfg.resolve(n_workers)
+        self.layout = layout
+        self.params = jax.tree.map(
+            lambda x: jnp.asarray(x, jnp.float32), params)
+        self.momentum = jax.tree.map(jnp.zeros_like, self.params)
+        self.buffer = jax.tree.map(jnp.zeros_like, self.params)
+        self.version = 0
+        self.dn_count = 0
+        self.staleness_hist: dict[int, int] = {}
+        self._merge_cache: dict[tuple[int, ...], Any] = {}
+        self._flush = None
+
+    # -------------------------------------------------------------- merges
+    @hot_path
+    def merge(self, delta: PyTree, base_version: int,
+              unit_ids: Sequence[int]) -> int:
+        """Fold one (averaged) delta into the model; returns its staleness.
+
+        ``delta`` is unstacked float32 (same structure as ``params``);
+        only the slices belonging to ``unit_ids`` are touched.
+        """
+        tau = max(0, self.version - base_version)
+        scale = jnp.float32(staleness_scale(self.cfg, tau))
+        fn = self._merge_fn(tuple(unit_ids))
+        if self.cfg.rule == "halos":
+            self.params, self.momentum = fn(
+                self.params, self.momentum, delta, scale)
+        else:
+            self.params, self.buffer = fn(
+                self.params, self.buffer, delta, scale)
+            self.dn_count += 1
+            if self.dn_count >= self.cfg.dn_delay:
+                self.params, self.momentum, self.buffer = self._flush_fn()(
+                    self.params, self.momentum, self.buffer)
+                self.dn_count = 0
+        self.version += 1
+        self.staleness_hist[tau] = self.staleness_hist.get(tau, 0) + 1
+        return tau
+
+    def _merge_fn(self, units: tuple[int, ...]):
+        fn = self._merge_cache.get(units)
+        if fn is not None:
+            return fn
+        cfg, layout = self.cfg, self.layout
+        if cfg.rule == "halos":
+            def apply(params, momentum, delta, scale):
+                def step(w, m, d):
+                    ds = d * scale
+                    m2 = cfg.momentum * m + ds
+                    upd = ds + cfg.momentum * m2 if cfg.nesterov else m2
+                    return w + cfg.lr * upd, m2, d
+                p2, m2, _ = tree_unit_map(
+                    step, (params, momentum, delta), units, layout)
+                return p2, m2
+        else:
+            def apply(params, buffer, delta, scale):
+                def step(w, b, d):
+                    ds = d * scale
+                    return w + cfg.lr * ds, b + ds, d
+                p2, b2, _ = tree_unit_map(
+                    step, (params, buffer, delta), units, layout)
+                return p2, b2
+        fn = jax.jit(apply)
+        self._merge_cache[units] = fn
+        return fn
+
+    def _flush_fn(self):
+        if self._flush is None:
+            cfg = self.cfg
+
+            def flush(params, momentum, buffer):
+                def one(m, b):
+                    return cfg.momentum * m + b / cfg.dn_delay
+                m2 = jax.tree.map(one, momentum, buffer)
+                p2 = jax.tree.map(
+                    lambda w, m: w + cfg.lr * cfg.momentum * m, params, m2)
+                b2 = jax.tree.map(jnp.zeros_like, buffer)
+                return p2, m2, b2
+
+            self._flush = jax.jit(flush)
+        return self._flush
+
+    # --------------------------------------------------------------- state
+    def snapshot(self) -> tuple[PyTree, int]:
+        """Current ``(params, version)`` — what a pulling worker sees.
+
+        The returned tree is never mutated in place (merges replace it
+        functionally), so callers may hold it as a delta base.
+        """
+        return self.params, self.version
+
+    def state(self) -> dict:
+        """Array state for checkpointing (scalars live in :meth:`meta`)."""
+        return {"params": self.params, "momentum": self.momentum,
+                "buffer": self.buffer}
+
+    def meta(self) -> dict:
+        return {"version": self.version, "dn_count": self.dn_count,
+                "staleness_hist": {str(k): v for k, v in
+                                   sorted(self.staleness_hist.items())}}
+
+    def load(self, state: dict, meta: dict) -> None:
+        as32 = lambda t: jax.tree.map(
+            lambda x: jnp.asarray(x, jnp.float32), t)
+        self.params = as32(state["params"])
+        self.momentum = as32(state["momentum"])
+        self.buffer = as32(state["buffer"])
+        self.version = int(meta["version"])
+        self.dn_count = int(meta["dn_count"])
+        self.staleness_hist = {int(k): int(v) for k, v in
+                               meta["staleness_hist"].items()}
+
+
+class PushEntry:
+    """One worker push waiting (or in flight) at a local server."""
+
+    __slots__ = ("worker", "period", "phase", "units", "base_version",
+                 "delta")
+
+    def __init__(self, worker, period, phase, units, base_version, delta):
+        self.worker = worker
+        self.period = period
+        self.phase = phase
+        self.units = tuple(sorted(units))
+        self.base_version = base_version
+        self.delta = delta
+
+    @property
+    def key(self) -> tuple[int, int, int]:
+        return (self.worker, self.period, self.phase)
+
+    def describe(self) -> dict:
+        return {"worker": self.worker, "period": self.period,
+                "phase": self.phase, "units": list(self.units),
+                "base_version": self.base_version}
+
+
+class LocalServer:
+    """Local tier: per-datacenter accumulation of worker pushes."""
+
+    def __init__(self, dc: int):
+        self.dc = dc
+        self.entries: list[PushEntry] = []
+
+    def push(self, delta: PyTree, units: Sequence[int], base_version: int,
+             *, worker: int, period: int, phase: int) -> None:
+        self.entries.append(PushEntry(worker, period, phase, units,
+                                      base_version, delta))
+
+    def take(self, contributors: Sequence[tuple[int, int, int]]
+             ) -> list[PushEntry]:
+        """Pop the entries named by the executor's merge op, in op order."""
+        want = list(contributors)
+        by_key = {e.key: e for e in self.entries}
+        missing = [k for k in want if tuple(k) not in by_key]
+        if missing:
+            raise KeyError(f"local server {self.dc} missing pushes "
+                           f"{missing}")
+        taken = [by_key[tuple(k)] for k in want]
+        drop = {tuple(k) for k in want}
+        self.entries = [e for e in self.entries if e.key not in drop]
+        return taken
+
+    @staticmethod
+    def merged_delta(entries: Sequence[PushEntry]
+                     ) -> tuple[PyTree, tuple[int, ...], int]:
+        """Average a flush batch: ``(delta, union units, min base)``."""
+        deltas = [e.delta for e in entries]
+        if len(deltas) == 1:
+            avg = deltas[0]
+        else:
+            inv = 1.0 / len(deltas)
+            avg = jax.tree.map(lambda *xs: sum(xs[1:], xs[0]) * inv, *deltas)
+        units: set[int] = set()
+        for e in entries:
+            units.update(e.units)
+        base = min(e.base_version for e in entries)
+        return avg, tuple(sorted(units)), base
+
+    def describe(self) -> list[dict]:
+        return [e.describe() for e in self.entries]

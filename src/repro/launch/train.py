@@ -67,6 +67,23 @@ def main(argv=None) -> int:
                          "per-phase executables, bitwise-equal to the "
                          "per-step path) or 'compiled' (one lax.scan "
                          "executable per period)")
+    ap.add_argument("--async", dest="async_mode",
+                    action=argparse.BooleanOptionalAction, default=False,
+                    help="asynchronous two-tier runtime (repro.hier): "
+                         "workers run periods on their own clocks and "
+                         "push layer-wise deltas to a server tier — no "
+                         "period-boundary barrier")
+    ap.add_argument("--staleness-beta", type=float, default=0.9,
+                    help="async merge: per-version staleness decay "
+                         "(scale = beta ** min(tau, max_staleness))")
+    ap.add_argument("--merge-rule", default="halos",
+                    choices=("halos", "delayed-nesterov"),
+                    help="async merge rule: HALoS staleness-aware "
+                         "Nesterov momentum, or delayed-Nesterov "
+                         "(buffered momentum every N merges)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="resolve the model/plan (and async config), "
+                         "print them, and exit without training")
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
@@ -84,19 +101,33 @@ def main(argv=None) -> int:
         decay_steps=max(args.steps, 100), compress=args.compress,
         outer=args.outer, track_divergence=args.track_divergence,
         fused_period=args.fused, period_exec=args.period_exec,
-        ckpt_dir=args.ckpt_dir))
+        ckpt_dir=args.ckpt_dir, async_mode=args.async_mode,
+        staleness_beta=args.staleness_beta, merge_rule=args.merge_rule))
 
     model = sess.model
+    mode = "async" if sess.use_async else \
+        ("off" if not args.fused else args.period_exec)
     print(f"arch={args.arch} smoke={args.smoke} "
           f"params={model.param_count() / 1e6:.1f}M algo={args.algo} "
-          f"W={args.workers} H={args.period} "
-          f"fused={'off' if not args.fused else args.period_exec}")
+          f"W={args.workers} H={args.period} exec={mode}")
     plan = sess.plan
     print(f"plan: {plan.meta.get('partition_counts')} "
           f"extra_syncs={plan.meta.get('extra_syncs')}")
+    if sess.use_async:
+        mc = sess.merge_config.resolve(args.workers)
+        print(f"merge: rule={mc.rule} lr={mc.lr:.4g} "
+              f"momentum={mc.momentum} beta={mc.staleness_beta} "
+              f"max_staleness={mc.max_staleness}")
+    if args.dry_run:
+        print("dry run: configuration resolved, exiting before training")
+        return 0
 
+    steps = args.steps
+    if sess.use_async and steps % args.period:
+        steps = max(args.period, steps - steps % args.period)
+        print(f"async fit advances whole periods: running {steps} steps")
     t0 = time.time()
-    sess.fit(args.steps)
+    sess.fit(steps)
     dt = time.time() - t0
     losses = [h["loss"] for h in sess.history]
     data = sess.runner.data

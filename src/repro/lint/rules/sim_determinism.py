@@ -26,7 +26,7 @@ from ..engine import ModuleContext
 from ..findings import Finding
 from ..registry import Rule, register
 
-_SCOPES = ("repro/sim/", "repro/core/schedule.py")
+_SCOPES = ("repro/sim/", "repro/core/schedule.py", "repro/hier/")
 
 _WALLCLOCK = {
     "time.time", "time.time_ns", "time.perf_counter",

@@ -80,6 +80,12 @@ class RunnerConfig:
     #               the pre-batched period); maximum fusion — XLA may
     #               re-round across phase boundaries (~1-2 ULP vs oracle)
     period_exec: str = "pipeline"
+    # depth-k data staging (pipeline.py): how many future periods to keep
+    # staged, and whether a daemon thread builds them off the train thread.
+    # Batch VALUES are bitwise-identical across depths/modes by
+    # construction — pure function of the step index.
+    prefetch_depth: int = 1
+    prefetch_background: bool = False
 
 
 @dataclass
@@ -330,9 +336,14 @@ class Runner:
         # the caller's reference stays valid (run() never donated before)
         state = jax.tree.map(jnp.copy, state)
         stacked = mode == "compiled"
+        cfg = self.run_cfg
         if self._prefetch is None or self._prefetch.data is not self.data \
-                or self._prefetch.h != H or self._prefetch.stacked != stacked:
-            self._prefetch = PeriodPrefetcher(self.data, H, stacked=stacked)
+                or self._prefetch.h != H or self._prefetch.stacked != stacked \
+                or self._prefetch.depth != max(1, cfg.prefetch_depth) \
+                or self._prefetch.background != cfg.prefetch_background:
+            self._prefetch = PeriodPrefetcher(
+                self.data, H, stacked=stacked, depth=cfg.prefetch_depth,
+                background=cfg.prefetch_background)
         pipe = self._prefetch
 
         def in_period(step):
@@ -386,7 +397,9 @@ class Runner:
                         state, m = fn(state, batch[h])
                         metrics.append(m)
                 if r + 2 * H <= end:
-                    pipe.prefetch(r + H)     # stage p+1 under p's compute
+                    # stage p+1..p+depth under p's compute; never past
+                    # the last full period of this run
+                    pipe.prefetch(r + H, last=end - H)
                 # blocking on (state, metrics) times the COMPLETED period
                 # — parameter syncs included — with one host sync per H
                 # steps instead of per step

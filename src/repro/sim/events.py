@@ -204,6 +204,11 @@ class VirtualCluster:
         return max((self._slow.get(w, 1.0) for w in self.active),
                    default=1.0)
 
+    def worker_slowdown(self, worker: int) -> float:
+        """One worker's current compute slowdown (async runtimes charge
+        stragglers individually instead of gating on the max)."""
+        return self._slow.get(worker, 1.0)
+
     def collective_time(self, nbytes: float, start: float, *,
                         jittered: bool = True) -> float:
         return self.network.collective_time(

@@ -190,6 +190,10 @@ class NetworkModel:
         handle[1] = t_end
 
     # -------------------------------------------------------------- queries
+    def link_spec(self, link: str) -> LinkSpec:
+        """The static spec of one link class (latency/jitter lookup)."""
+        return self._link(link).spec
+
     def bandwidth_at(self, link: str, t: float) -> float:
         return self._link(link).bandwidth_at(t)
 

@@ -23,8 +23,11 @@ class Interval:
 
     ``kind`` is ``fp`` (whole-model forward), ``bp`` (one layer's
     backward), ``comm`` (one unit's all-reduce) or ``stall`` (transient-
-    failure wait).  ``unit`` is the network-order layer id, or -1 for
-    whole-model spans.
+    failure wait).  The async runtime adds ``pull`` / ``compute`` /
+    ``push`` / ``merge`` spans.  ``unit`` is the network-order layer id,
+    or -1 for whole-model spans.  ``worker`` identifies whose timeline
+    the span belongs to in async traces (-1 for the synchronous
+    executor, where every worker shares one timeline).
     """
 
     kind: str
@@ -33,6 +36,7 @@ class Interval:
     unit: int
     start: float
     end: float
+    worker: int = -1
 
     @property
     def duration(self) -> float:
@@ -41,7 +45,8 @@ class Interval:
     def to_dict(self) -> dict:
         return {"kind": self.kind, "iteration": self.iteration,
                 "phase": self.phase, "unit": self.unit,
-                "start": self.start, "end": self.end}
+                "start": self.start, "end": self.end,
+                "worker": self.worker}
 
 
 @dataclass

@@ -254,3 +254,46 @@ def test_step_config_no_warning_without_legacy_flags():
         _warnings.simplefilter("error", DeprecationWarning)
         scfg = sess.step_config
     assert scfg.policy is not None
+
+
+# ----------------------------------------------------------- async sessions
+
+def test_session_async_fit_and_simulate():
+    """`hier-async` flips the whole session onto the two-tier runtime:
+    simulate defaults to the async executor, fit runs whole periods
+    through the op-log runner, state stays worker-stacked for serve."""
+    sess = _tiny_session("hier-async", workers=2, H=4)
+    assert sess.use_async
+
+    report = sess.simulate("straggler")
+    assert report.trace.meta["mode"] == "async"
+    sync = sess.simulate("straggler", mode="sync")
+    assert "mode" not in sync.trace.meta or \
+        sync.trace.meta.get("mode") != "async"
+
+    with pytest.raises(ValueError, match="whole periods"):
+        sess.fit(6)                       # not a multiple of H
+    sess.fit(8)
+    losses = [h["loss"] for h in sess.history]
+    assert losses and losses[-1] < losses[0]
+    flat = jax.tree_util.tree_leaves(sess.state.params)
+    assert all(leaf.shape[0] == 2 for leaf in flat)
+
+    # op-log replay is single-shot: a second fit cannot extend it
+    with pytest.raises(ValueError):
+        sess.fit(4)
+
+
+def test_session_async_mode_flag_on_plain_strategy():
+    sess = _tiny_session("dreamddp", workers=2, H=4, async_mode=True)
+    assert sess.use_async
+    assert sess.merge_config.rule == "halos"
+    report = sess.simulate("homogeneous")
+    assert report.trace.meta["mode"] == "async"
+
+
+def test_session_async_replan_rejected():
+    sess = _tiny_session("hier-async", workers=2, H=4)
+    sess.fit(4)
+    with pytest.raises(ValueError, match="replan"):
+        sess.replan(bandwidth=1e8)

@@ -241,3 +241,64 @@ def test_iteration_cli_fresh_path(tmp_path, iter_baseline):
     good.write_text(json.dumps(iter_baseline))
     assert check_bench.main(["--only", "iteration",
                              "--fresh-iteration", str(good)]) == 0
+
+
+# --------------------------------------------------------------- async gate
+
+@pytest.fixture
+def async_baseline():
+    with open(check_bench.BASELINE_ASYNC) as fh:
+        return json.load(fh)
+
+
+def test_async_baseline_passes_against_itself(async_baseline):
+    assert check_bench.compare_async(
+        async_baseline, copy.deepcopy(async_baseline)) == []
+
+
+def test_async_baseline_beats_sync_on_acceptance_scenarios(
+        async_baseline):
+    # the committed baseline itself must encode the paper-level claim
+    rows = {r["scenario"]: r for r in async_baseline["rows"]}
+    for name in async_baseline["must_win"]:
+        assert rows[name]["speedup"] > 1.0, name
+
+
+def test_async_makespan_drift_fails(async_baseline):
+    # deterministic SimNet replay: ANY makespan drift beyond the exact
+    # tolerance means the async time model changed
+    fresh = copy.deepcopy(async_baseline)
+    fresh["rows"][0]["async_makespan"] *= 1.02
+    problems = check_bench.compare_async(async_baseline, fresh)
+    assert any("async_makespan" in p for p in problems)
+
+
+def test_async_staleness_histogram_is_identity(async_baseline):
+    fresh = copy.deepcopy(async_baseline)
+    hist = dict(fresh["rows"][0]["staleness_hist"])
+    first = next(iter(sorted(hist)))
+    hist[first] += 1
+    fresh["rows"][0]["staleness_hist"] = hist
+    problems = check_bench.compare_async(async_baseline, fresh)
+    assert any("staleness_hist" in p
+               and "regenerate the baseline" in p for p in problems)
+
+
+def test_async_merge_count_change_flags_stale_baseline(async_baseline):
+    fresh = copy.deepcopy(async_baseline)
+    fresh["rows"][0]["merges"] += 1
+    problems = check_bench.compare_async(async_baseline, fresh)
+    assert any("merges" in p for p in problems)
+
+
+def test_async_cli_fresh_path(tmp_path, async_baseline):
+    good = tmp_path / "async.json"
+    good.write_text(json.dumps(async_baseline))
+    assert check_bench.main(["--only", "async",
+                             "--fresh-async", str(good)]) == 0
+    bad = copy.deepcopy(async_baseline)
+    bad["rows"][0]["speedup"] *= 1.1
+    badf = tmp_path / "bad_async.json"
+    badf.write_text(json.dumps(bad))
+    assert check_bench.main(["--only", "async",
+                             "--fresh-async", str(badf)]) == 1

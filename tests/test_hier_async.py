@@ -1,0 +1,115 @@
+"""AsyncSimExecutor: conformance against the heap-free reference,
+bitwise-deterministic traces, work accounting, and the makespan win
+over the barriered executor (the paper-level acceptance criterion)."""
+
+import pytest
+
+from repro.api.registry import get_strategy
+from repro.hier import (AsyncConfig, AsyncSimExecutor, MergeConfig,
+                        MergeOp, PushOp, check_async_library,
+                        check_async_scenario)
+from repro.sim import (SimExecutor, available_scenarios, get_scenario,
+                       prepare_run, synthetic_profile)
+
+H = 4
+LIBRARY = available_scenarios()
+
+
+def _jitter_free(name):
+    sc = get_scenario(name)
+    return not any(spec.jitter > 0 for spec in (sc.intra, sc.inter)
+                   if spec is not None)
+
+
+def _async_trace(name, periods=None, cfg=None):
+    sc = get_scenario(name)
+    profile = synthetic_profile()
+    cluster, plan = prepare_run(sc, get_strategy("dreamddp"), H, profile)
+    ex = AsyncSimExecutor(profile, plan, cluster, cfg=cfg)
+    return ex, ex.run(sc.periods if periods is None else periods)
+
+
+def _sync_makespan(name):
+    sc = get_scenario(name)
+    profile = synthetic_profile()
+    cluster, plan = prepare_run(sc, get_strategy("dreamddp"), H, profile)
+    return SimExecutor(profile, plan, cluster).run(sc.periods).makespan
+
+
+# ---------------------------------------------------------- conformance
+
+@pytest.mark.parametrize("name",
+                         [n for n in LIBRARY if _jitter_free(n)])
+def test_library_async_conformance(name):
+    """Acceptance criterion: every jitter-free scenario's async spans
+    agree with the heap-free greedy reference."""
+    report = check_async_scenario(get_scenario(name), H=H)
+    assert report.checks, f"{name}: nothing was checkable"
+    assert report.ok, report.summary()
+    assert report.max_rel_err < 1e-9            # stated tol is 1e-6
+
+
+def test_library_sweep_helper_covers_jitter_free_scenarios():
+    reports = check_async_library(H=H)
+    names = {r.scenario for r in reports}
+    assert names == {n for n in LIBRARY if _jitter_free(n)}
+    assert all(r.ok for r in reports)
+
+
+def test_jittered_scenario_rejected():
+    from repro.sim import Scenario
+    from repro.sim.network import LinkSpec
+    sc = Scenario(name="jittery", description="", n_workers=4,
+                  intra=LinkSpec(bandwidth=1e9, latency=1e-4,
+                                 jitter=0.1))
+    with pytest.raises(ValueError, match="jitter"):
+        check_async_scenario(sc, H=H)
+
+
+# ---------------------------------------------------------- determinism
+
+@pytest.mark.parametrize("name", LIBRARY)
+def test_library_async_determinism(name):
+    """Acceptance criterion: identical seeds -> byte-identical traces
+    (jittered scenarios included — their noise is seeded)."""
+    fps = [_async_trace(name)[1].fingerprint() for _ in range(2)]
+    assert fps[0] == fps[1]
+
+
+# ------------------------------------------------------ work accounting
+
+@pytest.mark.parametrize("name", LIBRARY)
+def test_work_conserving_quota(name):
+    ex, trace = _async_trace(name)
+    meta = trace.meta
+    done = sum(meta["worker_periods"].values())
+    assert done == meta["target_periods"]
+    # every claimed period pushed all its phase groups, and every push
+    # eventually merged (single-DC scenarios merge per push batch)
+    pushes = sum(isinstance(o, PushOp) for o in ex.ops)
+    merged = sum(len(o.contributors) for o in ex.ops
+                 if isinstance(o, MergeOp))
+    assert merged == pushes
+    assert meta["merges"] == sum(meta["staleness_hist"].values())
+    assert meta["final_merge_time"] >= 0.0
+
+
+def test_staleness_clamp_reported():
+    cfg = AsyncConfig(merge=MergeConfig(staleness_beta=0.5,
+                                        max_staleness=4))
+    _, trace = _async_trace("straggler", cfg=cfg)
+    # deep staleness occurs at W=8 x H phases; the clamp engages and the
+    # reported minimum scale is exactly the floor
+    assert max(int(k) for k in trace.meta["staleness_hist"]) > 4
+    assert trace.meta["staleness_scale_min"] == pytest.approx(0.5 ** 4)
+
+
+# --------------------------------------------------- async vs sync wins
+
+@pytest.mark.parametrize("name", ["straggler", "churn"])
+def test_async_beats_sync_on_acceptance_scenarios(name):
+    """Acceptance criterion: lower simulated makespan than the
+    barriered dreamddp executor at equal sample budget."""
+    _, trace = _async_trace(name)
+    async_makespan = max(trace.makespan, trace.meta["final_merge_time"])
+    assert async_makespan < _sync_makespan(name)

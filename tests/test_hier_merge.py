@@ -1,0 +1,178 @@
+"""Merge rules + server tier: config validation, mean equivalence,
+staleness damping, delayed-Nesterov math, local-server accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partial_sync import UnitEntry, UnitLayout
+from repro.hier import (GlobalServer, LocalServer, MergeConfig,
+                        staleness_scale)
+
+N_LAYERS = 3
+D = 4
+
+
+def _layout():
+    entries = (UnitEntry("emb", "emb", None),) + tuple(
+        UnitEntry(f"layer{i}", "layers", i) for i in range(N_LAYERS))
+    return UnitLayout(entries)
+
+
+def _params():
+    return {"emb": jnp.zeros((D,), jnp.float32),
+            "layers": jnp.zeros((N_LAYERS, D), jnp.float32)}
+
+
+def _delta(value):
+    return {"emb": jnp.full((D,), value, jnp.float32),
+            "layers": jnp.full((N_LAYERS, D), value, jnp.float32)}
+
+
+ALL_UNITS = tuple(range(N_LAYERS + 1))
+
+
+# ------------------------------------------------------------- MergeConfig
+
+def test_config_rejects_unknown_rule():
+    with pytest.raises(ValueError, match="merge rule"):
+        MergeConfig(rule="adamw")
+
+
+@pytest.mark.parametrize("beta", [0.0, -0.1, 1.5])
+def test_config_rejects_bad_beta(beta):
+    with pytest.raises(ValueError, match="staleness_beta"):
+        MergeConfig(staleness_beta=beta)
+
+
+def test_config_rejects_negative_clamp():
+    with pytest.raises(ValueError, match="max_staleness"):
+        MergeConfig(max_staleness=-1)
+
+
+def test_resolve_fills_fleet_defaults():
+    cfg = MergeConfig().resolve(8)
+    assert cfg.lr == pytest.approx(1.0 / 8)
+    assert cfg.dn_delay == 8
+    explicit = MergeConfig(lr=0.25, dn_delay=3).resolve(8)
+    assert explicit.lr == 0.25 and explicit.dn_delay == 3
+
+
+def test_staleness_scale_clamps():
+    cfg = MergeConfig(staleness_beta=0.5, max_staleness=3)
+    assert staleness_scale(cfg, 0) == 1.0
+    assert staleness_scale(cfg, 2) == pytest.approx(0.25)
+    # beyond the clamp every delta gets the same floor weight
+    assert staleness_scale(cfg, 3) == staleness_scale(cfg, 100) \
+        == pytest.approx(0.125)
+
+
+# ------------------------------------------------------------ GlobalServer
+
+def test_halos_round_of_fresh_deltas_is_worker_mean():
+    """With momentum off and tau=0 everywhere, one round of W deltas at
+    lr=1/W advances the model by exactly the worker-mean delta — the
+    async analogue of the synchronous parameter average."""
+    W = 4
+    server = GlobalServer(_params(), _layout(),
+                          MergeConfig(momentum=0.0), n_workers=W)
+    deltas = [float(w + 1) for w in range(W)]
+    for d in deltas:
+        tau = server.merge(_delta(d), server.version, ALL_UNITS)
+        assert tau == 0
+    want = sum(deltas) / W
+    np.testing.assert_allclose(np.asarray(server.params["emb"]), want,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(server.params["layers"]), want,
+                               rtol=1e-6)
+    assert server.version == W
+    assert server.staleness_hist == {0: W}
+
+
+def test_halos_staleness_damps_update():
+    cfg = MergeConfig(momentum=0.0, lr=1.0, staleness_beta=0.5,
+                      max_staleness=8)
+    server = GlobalServer(_params(), _layout(), cfg, n_workers=1)
+    server.merge(_delta(0.0), 0, ALL_UNITS)     # version -> 1
+    server.merge(_delta(0.0), 1, ALL_UNITS)     # version -> 2
+    tau = server.merge(_delta(1.0), 0, ALL_UNITS)
+    assert tau == 2
+    # first two deltas were zero; the stale one lands at beta**2
+    np.testing.assert_allclose(np.asarray(server.params["emb"]), 0.25,
+                               rtol=1e-6)
+
+
+def test_merge_touches_only_named_units():
+    server = GlobalServer(_params(), _layout(),
+                          MergeConfig(momentum=0.0, lr=1.0), n_workers=1)
+    server.merge(_delta(1.0), 0, (0, 2))        # emb + layer index 1
+    emb = np.asarray(server.params["emb"])
+    layers = np.asarray(server.params["layers"])
+    np.testing.assert_allclose(emb, 1.0)
+    np.testing.assert_allclose(layers[1], 1.0)
+    np.testing.assert_allclose(layers[0], 0.0)
+    np.testing.assert_allclose(layers[2], 0.0)
+
+
+def test_delayed_nesterov_immediate_then_flush():
+    cfg = MergeConfig(rule="delayed-nesterov", momentum=0.9, lr=1.0,
+                      dn_delay=2)
+    server = GlobalServer(_params(), _layout(), cfg, n_workers=2)
+    server.merge(_delta(1.0), server.version, ALL_UNITS)
+    # first merge applies immediately, no momentum yet
+    np.testing.assert_allclose(np.asarray(server.params["emb"]), 1.0,
+                               rtol=1e-6)
+    assert server.dn_count == 1
+    server.merge(_delta(3.0), server.version, ALL_UNITS)
+    # second merge triggers the flush: m = 0.9*0 + (1+3)/2 = 2,
+    # w = (1 + 3) + lr * 0.9 * m = 4 + 1.8
+    np.testing.assert_allclose(np.asarray(server.params["emb"]), 5.8,
+                               rtol=1e-6)
+    assert server.dn_count == 0
+    np.testing.assert_allclose(np.asarray(server.buffer["emb"]), 0.0)
+
+
+def test_server_state_roundtrip():
+    server = GlobalServer(_params(), _layout(), MergeConfig(),
+                          n_workers=2)
+    server.merge(_delta(1.0), 0, ALL_UNITS)
+    server.merge(_delta(2.0), 0, (1,))
+    other = GlobalServer(_params(), _layout(), MergeConfig(),
+                         n_workers=2)
+    other.load(server.state(), server.meta())
+    assert other.version == server.version
+    assert other.staleness_hist == server.staleness_hist
+    for key in ("emb", "layers"):
+        np.testing.assert_array_equal(np.asarray(other.params[key]),
+                                      np.asarray(server.params[key]))
+        np.testing.assert_array_equal(np.asarray(other.momentum[key]),
+                                      np.asarray(server.momentum[key]))
+
+
+# ------------------------------------------------------------- LocalServer
+
+def test_local_server_take_in_op_order_and_average():
+    srv = LocalServer(dc=0)
+    srv.push(_delta(1.0), (0, 1), 0, worker=0, period=0, phase=0)
+    srv.push(_delta(3.0), (1, 2), 1, worker=1, period=0, phase=0)
+    srv.push(_delta(9.0), (3,), 2, worker=0, period=1, phase=1)
+    entries = srv.take([(1, 0, 0), (0, 0, 0)])
+    assert [e.worker for e in entries] == [1, 0]
+    delta, units, base = LocalServer.merged_delta(entries)
+    np.testing.assert_allclose(np.asarray(delta["emb"]), 2.0)
+    assert units == (0, 1, 2)
+    assert base == 0
+    # taken entries are gone; the third is still queued
+    assert [e.key for e in srv.entries] == [(0, 1, 1)]
+    with pytest.raises(KeyError):
+        srv.take([(1, 0, 0)])
+
+
+def test_merged_delta_single_entry_passthrough():
+    srv = LocalServer(dc=0)
+    srv.push(_delta(5.0), (2,), 7, worker=3, period=4, phase=1)
+    delta, units, base = LocalServer.merged_delta(
+        srv.take([(3, 4, 1)]))
+    np.testing.assert_allclose(np.asarray(delta["layers"]), 5.0)
+    assert units == (2,) and base == 7

@@ -1,0 +1,177 @@
+"""AsyncHierRunner: real training over the deterministic op log —
+loss progress, bitwise determinism, single-shot run semantics, exact
+checkpoint/restore mid-run, elastic join/leave (the fault suite)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.registry import get_strategy
+from repro.checkpoint import CheckpointManager
+from repro.core import HardwareSpec, analytic_profile
+from repro.data import MarkovCorpus
+from repro.hier import AsyncHierRunner, AsyncRunnerConfig, JoinOp, LeaveOp
+from repro.models.transformer import DecoderLM, LMConfig
+from repro.optim import make_optimizer
+from repro.sim.events import WorkerJoin, WorkerLeave
+from repro.sim.network import LinkSpec
+from repro.sim.scenarios import Scenario
+
+SEQ = 32
+PERIODS = 4
+H = 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = LMConfig(name="t", n_layers=4, d_model=48, n_heads=4,
+                   n_kv_heads=2, d_ff=96, vocab=64,
+                   param_dtype="float32", remat=False)
+    return DecoderLM(cfg)
+
+
+def _scenario(n_workers, events=()):
+    return Scenario(name=f"tiny-{n_workers}w-{len(events)}ev",
+                    description="", n_workers=n_workers, n_datacenters=1,
+                    intra=LinkSpec(bandwidth=1e9, latency=1e-4,
+                                   jitter=0.0),
+                    inter=None, drift={}, events=tuple(events),
+                    periods=PERIODS, seed=0)
+
+
+def _runner(model, scenario, *, ckpt=None, ckpt_every=0):
+    w = scenario.n_workers
+    profile = analytic_profile(model.layer_costs(4, SEQ),
+                               HardwareSpec(bandwidth=1e9, n_workers=w))
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=400)
+    data = MarkovCorpus(vocab=64, seq_len=SEQ, batch_per_worker=4,
+                        n_workers=w, seed=0)
+    return AsyncHierRunner(
+        model, opt, get_strategy("dreamddp"), data, profile=profile,
+        scenario=scenario, H=H, seed=0, ckpt=ckpt,
+        run_cfg=AsyncRunnerConfig(ckpt_every_merges=ckpt_every))
+
+
+def _final_loss(runner):
+    hist = sorted(runner.history, key=lambda h: h["t_end"])
+    return hist[0]["loss"], hist[-1]["loss"]
+
+
+def _assert_trees_equal(a, b):
+    for (path, x), (_, y) in zip(
+            jax.tree_util.tree_flatten_with_path(a)[0],
+            jax.tree_util.tree_flatten_with_path(b)[0]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+def test_loss_decreases_and_trace_deterministic(model):
+    sc = _scenario(2)
+    r1 = _runner(model, sc)
+    tr1 = r1.run(PERIODS)
+    first, last = _final_loss(r1)
+    assert last < first
+    assert len(r1.history) == PERIODS * sc.n_workers
+    r2 = _runner(model, sc)
+    tr2 = r2.run(PERIODS)
+    assert tr1.fingerprint() == tr2.fingerprint()
+    _assert_trees_equal(r1.server.params, r2.server.params)
+
+
+def test_run_is_single_shot(model):
+    r = _runner(model, _scenario(2))
+    r.run(PERIODS)
+    with pytest.raises(ValueError, match="op-log replay cannot extend"):
+        r.run(PERIODS + 1)
+    # same total is a no-op replay continuation, not an error
+    r.run(PERIODS)
+
+
+def test_stacked_params_broadcasts_global_model(model):
+    r = _runner(model, _scenario(2))
+    r.run(PERIODS)
+    stacked = r.stacked_params(3)
+    flat = jax.tree_util.tree_leaves(stacked)
+    assert all(leaf.shape[0] == 3 for leaf in flat)
+    one = jax.tree.map(lambda x: x[1], stacked)
+    want = jax.tree.map(lambda g, p: g.astype(p.dtype), r.server.params,
+                        jax.tree.map(lambda x: x[0],
+                                     r._template.params))
+    _assert_trees_equal(one, want)
+
+
+def test_checkpoint_restore_replays_identical_run(model, tmp_path):
+    """Acceptance criterion: a resumed run replays to the same seeded
+    SimNet trace and bitwise-identical parameters."""
+    sc = _scenario(2)
+    ref = _runner(model, sc)
+    ref_trace = ref.run(PERIODS)
+
+    d = os.fspath(tmp_path)
+    ck = _runner(model, sc, ckpt=CheckpointManager(d, keep=50),
+                 ckpt_every=12)
+    ck_trace = ck.run(PERIODS)
+    assert ck_trace.fingerprint() == ref_trace.fingerprint()
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(d)
+                   if p.startswith("step_"))
+    assert len(steps) >= 2, "need a mid-run checkpoint to test restore"
+
+    res = _runner(model, sc, ckpt=CheckpointManager(d, keep=50))
+    version = res.restore(step=steps[len(steps) // 2])
+    assert version == steps[len(steps) // 2]
+    assert 0 < res.cursor
+    trace = res.run(PERIODS)
+    assert trace.fingerprint() == ref_trace.fingerprint()
+    _assert_trees_equal(res.server.params, ref.server.params)
+    for w in sorted(ref.states):
+        _assert_trees_equal(res.states[w].params, ref.states[w].params)
+
+
+def test_restore_rejects_foreign_plan(model, tmp_path):
+    sc = _scenario(2)
+    d = os.fspath(tmp_path)
+    r = _runner(model, sc, ckpt=CheckpointManager(d, keep=5),
+                ckpt_every=12)
+    r.run(PERIODS)
+    other = _runner(model, _scenario(3), ckpt=CheckpointManager(d, keep=5))
+    with pytest.raises(ValueError, match="different.*plan|plan"):
+        other.restore()
+
+
+def test_elastic_join_leave_round_trip(model):
+    """Acceptance criterion: elastic membership mid-async-run — the
+    leaver's state drops, the joiner bootstraps from the global model
+    and trains, and the whole run stays deterministic."""
+    sc = _scenario(3, events=(WorkerLeave(period=1, iteration=None, n=1),
+                              WorkerJoin(period=2, iteration=None, n=1)))
+    r = _runner(model, sc)
+    trace = r.run(PERIODS)
+    ops = r._schedule(PERIODS)[0]
+    joins = [o for o in ops if isinstance(o, JoinOp)]
+    leaves = [o for o in ops if isinstance(o, LeaveOp)]
+    assert len(joins) == 1 and len(leaves) == 1
+    assert leaves[0].worker not in r.states
+    assert joins[0].worker in r.states
+    assert any(h["worker"] == joins[0].worker for h in r.history)
+    first, last = _final_loss(r)
+    assert last < first
+    r2 = _runner(model, sc)
+    assert r2.run(PERIODS).fingerprint() == trace.fingerprint()
+    _assert_trees_equal(r.server.params, r2.server.params)
+
+
+def test_non_mean_policy_rejected(model):
+    from repro.runtime.step import StepConfig
+    sc = _scenario(2)
+    profile = analytic_profile(model.layer_costs(4, SEQ),
+                               HardwareSpec(bandwidth=1e9, n_workers=2))
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5, decay_steps=400)
+    data = MarkovCorpus(vocab=64, seq_len=SEQ, batch_per_worker=4,
+                        n_workers=2, seed=0)
+    with pytest.raises(ValueError, match="mean sync policy"):
+        AsyncHierRunner(model, opt, get_strategy("dreamddp"), data,
+                        profile=profile, scenario=sc, H=H,
+                        step_cfg=StepConfig(compress="int8_ef"))

@@ -1,0 +1,138 @@
+"""PeriodPrefetcher: depth-k / background staging is bitwise identical
+to the depth-1 inline double buffer — the knobs change only *when*
+batches are built, never *what* they contain."""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import HardwareSpec, analytic_profile, build_plan
+from repro.data import MarkovCorpus
+from repro.models.transformer import DecoderLM, LMConfig
+from repro.optim import make_optimizer
+from repro.runtime import (PeriodPrefetcher, Runner, RunnerConfig,
+                           StepConfig, init_train_state,
+                           stack_period_batches)
+
+W = 4
+H = 4
+
+
+@pytest.fixture(scope="module")
+def data():
+    return MarkovCorpus(vocab=64, seq_len=32, batch_per_worker=4,
+                        n_workers=W, seed=0)
+
+
+def _assert_tree_equal(a, b, what=""):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (_, lb) in zip(fa, fb, strict=True):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{what}{jax.tree_util.keystr(pa)}")
+
+
+@pytest.mark.parametrize("depth,background",
+                         [(1, False), (3, False), (1, True), (3, True)])
+@pytest.mark.parametrize("stacked", [True, False])
+def test_staged_batches_bitwise_identical(data, depth, background,
+                                          stacked):
+    """Every (depth, background, stacked) combination yields the same
+    bytes as building each period on the spot."""
+    pipe = PeriodPrefetcher(data, H, stacked=stacked, depth=depth,
+                            background=background)
+    starts = list(range(0, 5 * H, H))
+    pipe.prefetch(starts[0], last=starts[-1])
+    for s in starts:
+        got = pipe.get(s)
+        pipe.prefetch(s + H, last=starts[-1])
+        if stacked:
+            want = stack_period_batches(data, s, H)
+            _assert_tree_equal(got, want, f"period@{s}")
+        else:
+            assert len(got) == H
+            for h, b in enumerate(got):
+                _assert_tree_equal(b, data.batch(s + h), f"step@{s + h}")
+    assert not pipe._staged
+
+
+def test_prefetch_respects_depth_and_last(data):
+    pipe = PeriodPrefetcher(data, H, depth=3)
+    pipe.prefetch(0)
+    assert sorted(pipe._staged) == [0, H, 2 * H]
+    pipe.invalidate()
+    pipe.prefetch(0, last=H)          # clamp: the run ends at period 2
+    assert sorted(pipe._staged) == [0, H]
+
+
+def test_get_drops_stale_periods_after_rollback(data):
+    """A restore rolls the step counter back; get() must drop staged
+    periods before the new start and rebuild on the miss."""
+    pipe = PeriodPrefetcher(data, H, depth=2)
+    pipe.prefetch(0)
+    assert sorted(pipe._staged) == [0, H]
+    got = pipe.get(2 * H)             # jumped past everything staged
+    assert not pipe._staged
+    _assert_tree_equal(got, stack_period_batches(data, 2 * H, H))
+
+
+def test_invalidate_orphans_background_work(data):
+    pipe = PeriodPrefetcher(data, H, depth=2, background=True)
+    pipe.prefetch(0)
+    staged = dict(pipe._staged)
+    pipe.invalidate()
+    assert not pipe._staged
+    # orphaned slots resolve (as failures) instead of hanging a taker
+    for slot in staged.values():
+        assert slot.ready.wait(timeout=10.0)
+    fresh = pipe.get(0)
+    _assert_tree_equal(fresh, stack_period_batches(data, 0, H))
+
+
+def test_background_build_errors_surface_in_get():
+    class Exploding:
+        n_workers = W
+
+        def batch(self, step):
+            raise RuntimeError("boom at step %d" % step)
+
+    pipe = PeriodPrefetcher(Exploding(), H, background=True)
+    pipe.prefetch(0)
+    with pytest.raises(RuntimeError, match="boom"):
+        pipe.get(0)
+
+
+@pytest.mark.parametrize("depth,background", [(3, False), (3, True)])
+def test_fused_runner_state_bitwise_across_prefetch_modes(
+        data, depth, background):
+    """End to end: the fused runner with a deep/background pipeline
+    produces the exact TrainState of the default double buffer."""
+    cfg = LMConfig(name="t", n_layers=4, d_model=48, n_heads=4,
+                   n_kv_heads=2, d_ff=96, vocab=64,
+                   param_dtype="float32", remat=False)
+    model = DecoderLM(cfg)
+    prof = analytic_profile(model.layer_costs(4, 32),
+                            HardwareSpec(bandwidth=1e9, n_workers=W))
+    opt = make_optimizer("adam", lr=3e-3, warmup_steps=5,
+                         decay_steps=400)
+    plan = build_plan("dreamddp", prof, H)
+    scfg = StepConfig()
+    n = 4 * H
+
+    def run(**pf_kw):
+        r = Runner(model, opt, plan, data, step_cfg=scfg,
+                   run_cfg=RunnerConfig(fused_period=True, **pf_kw))
+        s = init_train_state(model, opt, jax.random.PRNGKey(0), W,
+                             cfg=scfg)
+        return r.run(s, n), r
+
+    base_state, base_runner = run()
+    deep_state, deep_runner = run(prefetch_depth=depth,
+                                  prefetch_background=background)
+    _assert_tree_equal(base_state, deep_state, "state")
+    assert [h["loss"] for h in base_runner.history] == \
+        [h["loss"] for h in deep_runner.history]

@@ -47,6 +47,20 @@ def test_train_cli_runs():
     assert rc == 0
 
 
+def test_train_cli_async_dry_run(capsys):
+    from repro.launch.train import main
+    rc = main(["--arch", "qwen3-1.7b", "--smoke", "--async",
+               "--workers", "2", "--period", "4", "--steps", "8",
+               "--merge-rule", "delayed-nesterov",
+               "--staleness-beta", "0.8", "--dry-run"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "exec=async" in out
+    assert "rule=delayed-nesterov" in out
+    assert "beta=0.8" in out
+    assert "dry run" in out
+
+
 def test_serve_cli_runs():
     from repro.launch.serve import main
     rc = main(["--arch", "granite-3-2b", "--smoke", "--batch", "2",
